@@ -1,0 +1,64 @@
+"""Shared benchmark plumbing: result paths, OPD policy training cache,
+CSV emission. Every fig*.py module exposes ``run(quick: bool) -> list[row]``
+where a row is (benchmark, metric, value, reference) — ``reference`` is the
+paper's claim the value should be compared against (or "" if none).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+
+import numpy as np
+
+RESULTS_DIR = os.path.join("experiments", "results")
+POLICY_CACHE = os.path.join("experiments", "opd_policy.pkl")
+
+
+def save_results(name: str, payload: dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1, default=_np_default)
+
+
+def _np_default(o):
+    if isinstance(o, (np.floating, np.integer)):
+        return o.item()
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+def trained_opd(episodes: int = 36, *, seed: int = 0, force: bool = False,
+                log=print):
+    """Train (or load cached) OPD policy on the paper's three workload
+    regimes, round-robin over episodes. Returns (params, trainer_history)."""
+    from repro.cluster import PipelineEnv, default_pipeline, make_trace
+    from repro.core import OPDTrainer, PPOConfig
+
+    if not force and os.path.exists(POLICY_CACHE):
+        with open(POLICY_CACHE, "rb") as f:
+            blob = pickle.load(f)
+        if blob.get("episodes", 0) >= episodes:
+            return blob["params"], blob["history"]
+
+    pipe = default_pipeline()
+    kinds = ("steady_low", "fluctuating", "steady_high")
+
+    def make_env(seed_):
+        return PipelineEnv(pipe, make_trace(kinds[seed_ % 3], seed=seed_),
+                           seed=seed_)
+
+    tr = OPDTrainer(pipe, make_env, ppo=PPOConfig(expert_freq=4), seed=seed)
+    for e in range(1, episodes + 1):
+        tr.train_episode(e, env_seed=e)
+        if log and (e % 6 == 0 or e == 1):
+            log(f"  opd episode {e:3d}/{episodes} "
+                f"reward={tr.history['reward'][-1]:9.2f} "
+                f"loss={tr.history['loss'][-1]:8.4f} "
+                f"expert={tr.history['expert'][-1]}")
+    os.makedirs(os.path.dirname(POLICY_CACHE), exist_ok=True)
+    with open(POLICY_CACHE, "wb") as f:
+        pickle.dump({"params": tr.params, "history": tr.history,
+                     "episodes": episodes}, f)
+    return tr.params, tr.history

@@ -1,0 +1,123 @@
+"""Roofline collector — reads the dry-run records under experiments/dryrun/
+and emits the per-(arch x shape x mesh) roofline table for EXPERIMENTS.md
+§Roofline: three terms in seconds, dominant bottleneck, and the
+MODEL_FLOPS / HLO_FLOPS usefulness ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save_results
+
+DRYRUN_DIR = os.path.join("experiments", "dryrun")
+
+
+def load_records(mesh: str | None = "16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh is None or r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def table(mesh: str = "16x16"):
+    """-> list of row dicts (only OK records), sorted worst-first by the
+    dominant-term wall time."""
+    rows = []
+    for r in load_records(mesh):
+        if r["status"] != "OK":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": r["status"],
+                         "reason": r.get("reason", r.get("error", ""))})
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "OK",
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": t["dominant"],
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "peak_gb_per_dev": r["memory"]["peak_bytes"] / 1e9,
+            "step_time_bound_s": max(t["compute_s"], t["memory_s"],
+                                     t["collective_s"]),
+            "roofline_fraction": (t["compute_s"] /
+                                  max(t["compute_s"], t["memory_s"],
+                                      t["collective_s"], 1e-30)),
+        })
+    ok = [x for x in rows if x["status"] == "OK"]
+    ok.sort(key=lambda x: -x["step_time_bound_s"])
+    return ok + [x for x in rows if x["status"] != "OK"]
+
+
+def run(quick: bool = False):
+    rows = []
+    tab = table("16x16")
+    oks = [x for x in tab if x["status"] == "OK"]
+    if not oks:
+        return [("roofline", "records", 0, "run launch/dryrun first")]
+    save_results("roofline_16x16", {"rows": tab})
+    by_dom = {}
+    for x in oks:
+        by_dom[x["dominant"]] = by_dom.get(x["dominant"], 0) + 1
+    rows.append(("roofline", "records_ok", len(oks), "39 live combos"))
+    rows.append(("roofline", "dominant_split",
+                 "/".join(f"{k}:{v}" for k, v in sorted(by_dom.items())), ""))
+    worst = oks[0]
+    rows.append(("roofline", "slowest_pair",
+                 f"{worst['arch']}|{worst['shape']}",
+                 f"bound {worst['step_time_bound_s']:.3f}s "
+                 f"dom={worst['dominant']}"))
+    best_frac = max(oks, key=lambda x: x["roofline_fraction"])
+    rows.append(("roofline", "best_compute_fraction",
+                 f"{best_frac['arch']}|{best_frac['shape']}"
+                 f"={best_frac['roofline_fraction']:.2f}", ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))
+
+
+def markdown(mesh: str = "16x16", baseline_dir: str | None = None) -> str:
+    """EXPERIMENTS.md §Roofline table (optionally with baseline deltas)."""
+    import os
+
+    rows = table(mesh)
+    base = {}
+    if baseline_dir:
+        global DRYRUN_DIR
+        keep = DRYRUN_DIR
+        DRYRUN_DIR = baseline_dir
+        try:
+            base = {(x["arch"], x["shape"]): x for x in table(mesh)
+                    if x["status"] == "OK"}
+        finally:
+            DRYRUN_DIR = keep
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful | peak GB/dev |")
+    sep = "|---|---|---|---|---|---|---|---|"
+    out = [hdr, sep]
+    for x in rows:
+        if x["status"] != "OK":
+            out.append(f"| {x['arch']} | {x['shape']} | — | — | — | "
+                       f"{x['status']}: {x['reason']} | — | — |")
+            continue
+
+        def fmt(key, unit=1.0, nd=4):
+            v = x[key] * unit
+            b = base.get((x["arch"], x["shape"]))
+            if b and b[key] > 0 and abs(v / (b[key] * unit) - 1) > 0.05:
+                return f"{v:.{nd}g} ({v / (b[key] * unit):.2g}x)"
+            return f"{v:.{nd}g}"
+
+        out.append(
+            f"| {x['arch']} | {x['shape']} | {fmt('compute_s')} | "
+            f"{fmt('memory_s')} | {fmt('collective_s')} | "
+            f"{x['dominant'].replace('_s', '')} | "
+            f"{x['useful_flops_ratio']:.2f} | {x['peak_gb_per_dev']:.1f} |")
+    return "\n".join(out)

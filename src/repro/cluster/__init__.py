@@ -1,0 +1,4 @@
+from repro.cluster.workloads import make_trace, WORKLOADS
+from repro.cluster.perf_model import variant_from_arch, default_pipeline, make_pipeline
+from repro.cluster.env import PipelineEnv
+from repro.cluster.monitor import Monitor

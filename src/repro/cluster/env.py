@@ -1,0 +1,115 @@
+"""Edge-cell simulator exposing the paper's MDP (state Eq. 5, action Eq. 6,
+reward Eq. 7) as a gym-style environment.
+
+Each step = one 10 s adaptation interval over a 1 Hz workload trace. The
+stage latency/throughput physics come from perf_model (analytic v5e roofline
+of the real architectures); variant switches pay a cold-start penalty
+(container re-pull in the paper, weight re-shard here).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cluster.monitor import Monitor
+from repro.core.mdp import (Config, Pipeline, QoSWeights, evaluate,
+                            resource_usage)
+
+ADAPTATION_INTERVAL = 10          # seconds between decisions (paper §VI-B)
+COLD_START_FRACTION = 0.3         # capacity lost in the interval after a switch
+
+
+class PipelineEnv:
+    def __init__(self, pipe: Pipeline, trace: np.ndarray, *,
+                 weights: QoSWeights | None = None, history: int = 120,
+                 predictor=None, seed: int = 0):
+        self.pipe = pipe
+        self.trace = np.asarray(trace, dtype=np.float64)
+        self.w = weights or QoSWeights()
+        self.monitor = Monitor(history)
+        self.predictor = predictor           # callable: load_hist -> predicted
+        self.rng = np.random.default_rng(seed)
+        self.n_steps = len(self.trace) // ADAPTATION_INTERVAL
+        self.reset()
+
+    # ------------------------------------------------------------ state --
+
+    @property
+    def state_dim(self) -> int:
+        # per task: (u, p, m, l, t, z, f, b, c)  — Eq. (5)
+        return self.pipe.n_tasks * 9
+
+    def _observe(self) -> np.ndarray:
+        pipe, cfg = self.pipe, self.cfg
+        u = (pipe.w_max - resource_usage(pipe, cfg)) / pipe.w_max
+        p = self._current_load() / 100.0
+        m = self._predicted_load() / 100.0
+        rows = []
+        for n, task in enumerate(pipe.tasks):
+            var = task.variants[cfg.z[n]]
+            rows.append([
+                u, p, m,
+                var.latency(cfg.b[n]),                       # l_n
+                var.throughput(cfg.b[n], cfg.f[n]) / 100.0,  # t_n
+                cfg.z[n] / max(1, len(task.variants) - 1),
+                cfg.f[n] / pipe.f_max,
+                cfg.b[n] / pipe.b_max,
+                cfg.f[n] * var.cost / pipe.w_max,            # c_n
+            ])
+        return np.asarray(rows, dtype=np.float32).reshape(-1)
+
+    def _current_load(self) -> float:
+        s = self.t * ADAPTATION_INTERVAL
+        return float(self.trace[max(0, s - 1)])
+
+    def _predicted_load(self) -> float:
+        if self.predictor is not None:
+            return float(self.predictor(self.monitor.load_history()))
+        return self._current_load()
+
+    # ------------------------------------------------------------- api --
+
+    def default_config(self) -> Config:
+        N = self.pipe.n_tasks
+        return Config(z=tuple(0 for _ in range(N)),
+                      f=tuple(1 for _ in range(N)),
+                      b=tuple(1 for _ in range(N)))
+
+    def reset(self) -> np.ndarray:
+        self.t = 0
+        self.cfg = self.default_config()
+        self.monitor = Monitor(self.monitor.history)
+        for s in range(min(self.monitor.history, len(self.trace))):
+            self.monitor.record(self.trace[s])
+        return self._observe()
+
+    def step(self, action: Config):
+        """Apply ``action`` for the next adaptation interval."""
+        prev = self.cfg
+        self.cfg = action
+        switched = np.array([action.z[n] != prev.z[n]
+                             for n in range(self.pipe.n_tasks)])
+
+        s0 = self.t * ADAPTATION_INTERVAL
+        s1 = min(len(self.trace), s0 + ADAPTATION_INTERVAL)
+        demand = float(np.mean(self.trace[s0:s1]))
+
+        cold = (COLD_START_FRACTION * switched.sum() / self.pipe.n_tasks
+                if switched.any() else 0.0)
+        m = evaluate(self.pipe, action, demand, self.w, cold_frac=cold)
+        r = m["reward"]
+        infeasible = resource_usage(self.pipe, action) > self.pipe.w_max
+        if infeasible:
+            r -= 50.0
+
+        for s in range(s0, s1):
+            self.monitor.record(self.trace[s], qos=m["qos"], cost=m["C"],
+                                latency=m["L"], throughput=m["T"],
+                                excess=m["E"])
+
+        self.t += 1
+        done = self.t >= self.n_steps
+        info = {"qos": m["qos"], "cost": m["C"], "latency": m["L"],
+                "throughput": m["T"], "excess": m["E"], "demand": demand,
+                "processed": m["T"], "capacity": m["capacity"],
+                "infeasible": infeasible}
+        return self._observe(), float(r), done, info

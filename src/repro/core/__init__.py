@@ -1,0 +1,15 @@
+"""OPD — the paper's contribution: MDP model, LSTM workload predictor,
+residual feature extraction, PPO policy with expert guidance, baselines."""
+from repro.core.mdp import (ModelVariant, Task, Pipeline, Config, QoSWeights,
+                            pipeline_metrics, qos, objective, reward, feasible,
+                            resource_usage)
+from repro.core.predictor import (init_predictor, predict_batch, train_predictor,
+                                  smape, as_predictor_fn, HISTORY, HORIZON)
+from repro.core.features import init_features, extract, FEATURE_DIM
+from repro.core.policy import (init_policy, apply_policy, sample_action,
+                               log_prob_entropy, head_sizes, action_to_config,
+                               config_to_action)
+from repro.core.ppo import PPOConfig, OPDTrainer, compute_gae
+from repro.core.expert import ExpertPolicy
+from repro.core.baselines import RandomPolicy, GreedyPolicy, IPAPolicy
+from repro.core.opd import OPDPolicy, run_episode

@@ -1,0 +1,20 @@
+"""Feature extraction module (paper §IV-C): node+pipeline state -> FC
+dimensionality reduction -> residual blocks -> unified feature vector."""
+from __future__ import annotations
+
+import jax
+
+from repro import nn
+
+FEATURE_DIM = 128
+N_BLOCKS = 3
+
+
+def init_features(key, state_dim: int, *, dim: int = FEATURE_DIM,
+                  n_blocks: int = N_BLOCKS):
+    return nn.init_res_mlp(key, state_dim, dim, n_blocks)
+
+
+def extract(params, state):
+    """state [B, state_dim] -> features [B, FEATURE_DIM]."""
+    return nn.res_mlp(params, state)

@@ -1,0 +1,168 @@
+"""The paper's problem model (§III): pipeline, metrics, QoS, objective.
+
+A pipeline is a chain of tasks; each task n has a set of model variants Z_n.
+A configuration assigns every task a (variant index z, replicas f, batch b).
+
+Metrics (paper equations):
+  Eq. (1)  V = Σ_n v_n(z_n)                      pipeline accuracy
+  Eq. (2)  C = Σ_n f_n · c_n(z_n)                 cost (chips, was CPU cores)
+  Eq. (3)  Q = α·V + β·T − L − γ·E⁺ / − δ·(−E)⁻   QoS
+  Eq. (4)  max  Q − λ·C   s.t. bounds + Σ w_n(z_n)·f_n ≤ W_max
+  Eq. (7)  r = Q − β_c·C − γ_b·B                  RL reward
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ModelVariant:
+    """One servable model variant for a pipeline task.
+
+    latency(b) = alpha + beta * b   (seconds, batch-linear serving model)
+    throughput at batch b with f replicas = f * b / latency(b)
+    """
+    name: str
+    accuracy: float          # v_n(z)  in [0, 1]
+    cost: float              # c_n(z)  chips per replica
+    resource: float          # w_n(z)  resource units per replica (== cost here)
+    alpha: float             # fixed per-batch latency (s)
+    beta: float              # per-item latency slope (s)
+
+    def latency(self, batch: int) -> float:
+        return self.alpha + self.beta * batch
+
+    def throughput(self, batch: int, replicas: int) -> float:
+        return replicas * batch / self.latency(batch)
+
+
+@dataclass(frozen=True)
+class Task:
+    name: str
+    variants: tuple[ModelVariant, ...]
+
+
+@dataclass(frozen=True)
+class Pipeline:
+    name: str
+    tasks: tuple[Task, ...]
+    f_max: int = 8
+    b_max: int = 32
+    w_max: float = 64.0      # total device resource capacity W_max
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.tasks)
+
+    def batch_choices(self) -> list[int]:
+        out, b = [], 1
+        while b <= self.b_max:
+            out.append(b)
+            b *= 2
+        return out
+
+
+@dataclass(frozen=True)
+class QoSWeights:
+    """Eq. (3)/(4)/(7) weighting parameters."""
+    alpha: float = 4.0       # accuracy weight
+    beta: float = 0.05       # (measured) throughput weight
+    gamma: float = 0.08      # unmet-demand penalty (E >= 0)
+    delta: float = 0.005     # spare-capacity penalty (E < 0)
+    lam: float = 0.12        # cost weight in the objective (Eq. 4)
+    beta_c: float = 0.12     # cost weight in the reward (Eq. 7)
+    gamma_b: float = 0.02    # batch-size penalty in the reward (Eq. 7)
+
+
+@dataclass(frozen=True)
+class Config:
+    """One decision a_t: per-task (variant z, replicas f, batch b)."""
+    z: tuple[int, ...]
+    f: tuple[int, ...]
+    b: tuple[int, ...]
+
+    def as_array(self) -> np.ndarray:
+        return np.array([self.z, self.f, self.b], dtype=np.int64).T   # [N, 3]
+
+
+def stage_latency(var: ModelVariant, b: int, f: int, demand: float) -> float:
+    """End-to-end stage latency: batch-assembly wait (time to fill a batch of
+    b at arrival rate demand/f per replica) + queue-aware service time
+    (M/M/1-style 1/(1-ρ) inflation as utilisation approaches capacity)."""
+    service = var.latency(b)
+    wait = min(b * f / max(demand, 1e-6), 2.0)
+    rho = demand / max(var.throughput(b, f), 1e-9)
+    congestion = 1.0 / max(1.0 - rho, 0.1)
+    return wait + service * congestion
+
+
+def pipeline_metrics(pipe: Pipeline, cfg: Config, demand: float,
+                     *, cold_frac: float = 0.0):
+    """(V, C, T_meas, L, E, capacity) under ``demand`` req/s.
+
+    capacity = min stage capacity (paper: min throughput across tasks);
+    T_meas   = measured pipeline throughput = min(capacity, demand) — what a
+               Prometheus monitor reports; used in the QoS (Eq. 3) T term;
+    E        = demand - capacity (positive -> unmet load, negative -> spare);
+    cold_frac degrades capacity (variant-switch cold start).
+    """
+    V = C = L = 0.0
+    capacity = float("inf")
+    for n, task in enumerate(pipe.tasks):
+        var = task.variants[cfg.z[n]]
+        f, b = cfg.f[n], cfg.b[n]
+        V += var.accuracy
+        C += f * var.cost
+        L += stage_latency(var, b, f, demand)
+        capacity = min(capacity, var.throughput(b, f))
+    capacity *= (1.0 - cold_frac)
+    E = demand - capacity
+    T_meas = min(demand, capacity)
+    return V, C, T_meas, L, E, capacity
+
+
+def resource_usage(pipe: Pipeline, cfg: Config) -> float:
+    return sum(task.variants[cfg.z[n]].resource * cfg.f[n]
+               for n, task in enumerate(pipe.tasks))
+
+
+def feasible(pipe: Pipeline, cfg: Config) -> bool:
+    if resource_usage(pipe, cfg) > pipe.w_max:
+        return False
+    for n in range(pipe.n_tasks):
+        if not (0 <= cfg.z[n] < len(pipe.tasks[n].variants)):
+            return False
+        if not (1 <= cfg.f[n] <= pipe.f_max):
+            return False
+        if not (1 <= cfg.b[n] <= pipe.b_max):
+            return False
+    return True
+
+
+def evaluate(pipe: Pipeline, cfg: Config, demand: float, w: QoSWeights,
+             *, cold_frac: float = 0.0) -> dict:
+    """All paper metrics for one interval: Eq. (1)-(4) and (7)."""
+    V, C, T, L, E, capacity = pipeline_metrics(pipe, cfg, demand,
+                                               cold_frac=cold_frac)
+    q = w.alpha * V + w.beta * T - L - (w.gamma * E if E >= 0
+                                        else w.delta * (-E))
+    r = q - w.beta_c * C - w.gamma_b * max(cfg.b)
+    return {"V": V, "C": C, "T": T, "L": L, "E": E, "capacity": capacity,
+            "qos": q, "reward": r, "objective": q - w.lam * C}
+
+
+def qos(pipe: Pipeline, cfg: Config, demand: float, w: QoSWeights) -> float:
+    """Eq. (3)."""
+    return evaluate(pipe, cfg, demand, w)["qos"]
+
+
+def objective(pipe: Pipeline, cfg: Config, demand: float, w: QoSWeights) -> float:
+    """Eq. (4):  Q − λ·C."""
+    return evaluate(pipe, cfg, demand, w)["objective"]
+
+
+def reward(pipe: Pipeline, cfg: Config, demand: float, w: QoSWeights) -> float:
+    """Eq. (7):  Q − β_c·C − γ_b·B  (B = max batch across tasks)."""
+    return evaluate(pipe, cfg, demand, w)["reward"]

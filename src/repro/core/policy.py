@@ -1,0 +1,98 @@
+"""Multi-discrete actor-critic policy network.
+
+Action a_t = [(z_n, f_n, b_n)]_{n=1..N} (Eq. 6) -> one categorical head per
+(task, knob). The feature extractor (residual blocks, features.py) is shared
+between the actor heads and the value function. When the pipeline changes,
+the head structure is rebuilt to match the new action space (paper: "When
+the task changes, the action space must be modified").
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.core.features import FEATURE_DIM, extract, init_features
+from repro.core.mdp import Config, Pipeline
+
+
+def head_sizes(pipe: Pipeline) -> tuple[int, ...]:
+    """Per-task (|Z_n|, F_max, |batch choices|) flattened."""
+    sizes = []
+    nb = len(pipe.batch_choices())
+    for task in pipe.tasks:
+        sizes += [len(task.variants), pipe.f_max, nb]
+    return tuple(sizes)
+
+
+def init_policy(key, state_dim: int, sizes: tuple[int, ...]):
+    ks = jax.random.split(key, len(sizes) + 2)
+    return {
+        "features": init_features(ks[0], state_dim),
+        "heads": [nn.init_linear(k, FEATURE_DIM, s, bias=True, scale=0.01)
+                  for k, s in zip(ks[1:-1], sizes)],
+        "value": nn.init_linear(ks[-1], FEATURE_DIM, 1, bias=True, scale=0.01),
+    }
+
+
+def apply_policy(params, state):
+    """state [B, D] -> (list of logits [B, s_i], value [B])."""
+    feats = extract(params["features"], state)
+    logits = [nn.linear(h, feats) for h in params["heads"]]
+    value = nn.linear(params["value"], feats)[..., 0]
+    return logits, value
+
+
+@partial(jax.jit, static_argnames=("greedy",))
+def sample_action(params, state, key, *, greedy: bool = False):
+    """state [D] -> (action indices [n_heads], log_prob, value)."""
+    logits, value = apply_policy(params, state[None])
+    idxs, logps = [], []
+    keys = jax.random.split(key, len(logits))
+    for lg, k in zip(logits, keys):
+        lg = lg[0]
+        logp = jax.nn.log_softmax(lg)
+        idx = jnp.argmax(lg) if greedy else jax.random.categorical(k, lg)
+        idxs.append(idx)
+        logps.append(logp[idx])
+    return jnp.stack(idxs), jnp.stack(logps).sum(), value[0]
+
+
+def log_prob_entropy(params, states, actions):
+    """states [B, D]; actions [B, n_heads] -> (logp [B], entropy [B], value [B])."""
+    logits, value = apply_policy(params, states)
+    logp_total = 0.0
+    ent_total = 0.0
+    for i, lg in enumerate(logits):
+        logp = jax.nn.log_softmax(lg)
+        probs = jnp.exp(logp)
+        logp_total = logp_total + jnp.take_along_axis(
+            logp, actions[:, i:i + 1], axis=-1)[:, 0]
+        ent_total = ent_total - jnp.sum(probs * logp, axis=-1)
+    return logp_total, ent_total, value
+
+
+def action_to_config(pipe: Pipeline, action: np.ndarray) -> Config:
+    """Head indices [3N] -> Config, clamped to each task's variant count."""
+    bc = pipe.batch_choices()
+    z, f, b = [], [], []
+    for n, task in enumerate(pipe.tasks):
+        zi = int(action[3 * n]) % len(task.variants)
+        fi = int(action[3 * n + 1]) + 1
+        bi = bc[int(action[3 * n + 2]) % len(bc)]
+        z.append(zi)
+        f.append(fi)
+        b.append(bi)
+    return Config(z=tuple(z), f=tuple(f), b=tuple(b))
+
+
+def config_to_action(pipe: Pipeline, cfg: Config) -> np.ndarray:
+    """Inverse of action_to_config (for expert trajectories)."""
+    bc = pipe.batch_choices()
+    out = []
+    for n in range(pipe.n_tasks):
+        out += [cfg.z[n], cfg.f[n] - 1, bc.index(cfg.b[n])]
+    return np.asarray(out, dtype=np.int32)

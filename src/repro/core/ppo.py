@@ -1,0 +1,195 @@
+"""PPO with clipped surrogate objective (Eq. 11/12) + expert-guided episodes
+(Algorithm 2). Optimiser: mini-batch Adam (paper: "Optimize the network by
+mini-batch SGD with Adam optimizer").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.expert import ExpertPolicy
+from repro.core.mdp import Pipeline, QoSWeights
+from repro.core.policy import (action_to_config, config_to_action, head_sizes,
+                               init_policy, log_prob_entropy, sample_action)
+from repro.train import adamw_init, adamw_update, clip_by_global_norm
+
+
+@dataclass(frozen=True)
+class PPOConfig:
+    lr: float = 3e-4
+    clip_eps: float = 0.2        # ε in Eq. (12)
+    c1: float = 0.5              # value-loss coefficient (Eq. 11)
+    c2: float = 0.01             # entropy-bonus coefficient (Eq. 11)
+    gamma: float = 0.99
+    gae_lambda: float = 0.95
+    epochs: int = 4
+    minibatch: int = 64
+    expert_freq: int = 4         # every f-th episode uses expert actions (Alg. 2)
+    reward_scale: float = 0.05   # keeps value targets O(1) for stable VF learning
+    # Alg. 2 keeps a replay memory D of expert transitions; we distil it into
+    # the policy with a behaviour-cloning auxiliary loss each update.
+    bc_coef: float = 0.3
+    expert_buffer: int = 8192    # max expert (s, a) pairs retained in D
+
+
+def compute_gae(rewards, values, last_value, *, gamma: float, lam: float):
+    """Generalised advantage estimation over one episode."""
+    T = len(rewards)
+    adv = np.zeros(T, dtype=np.float32)
+    gae = 0.0
+    for t in reversed(range(T)):
+        v_next = last_value if t == T - 1 else values[t + 1]
+        delta = rewards[t] + gamma * v_next - values[t]
+        gae = delta + gamma * lam * gae
+        adv[t] = gae
+    returns = adv + values
+    return adv, returns
+
+
+@partial(jax.jit, static_argnames=("clip_eps", "c1", "c2", "lr"))
+def ppo_minibatch_update(params, opt, states, actions, old_logp, adv, returns,
+                         bc_states, bc_actions, bc_coef,
+                         *, clip_eps: float, c1: float, c2: float, lr: float):
+    def loss_fn(p):
+        logp, ent, value = log_prob_entropy(p, states, actions)
+        ratio = jnp.exp(logp - old_logp)
+        clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+        l_clip = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+        l_vf = jnp.mean((value - returns) ** 2)
+        l_ent = jnp.mean(ent)
+        # behaviour cloning on the expert replay memory D (Alg. 2)
+        bc_logp, _, _ = log_prob_entropy(p, bc_states, bc_actions)
+        l_bc = -jnp.mean(bc_logp)
+        loss = l_clip + c1 * l_vf - c2 * l_ent + bc_coef * l_bc
+        return loss, (l_clip, l_vf, l_ent)
+
+    (loss, (l_clip, l_vf, l_ent)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params)
+    grads, _ = clip_by_global_norm(grads, 0.5)
+    params, opt = adamw_update(params, grads, opt, lr=lr, weight_decay=0.0)
+    return params, opt, loss, l_clip, l_vf, l_ent
+
+
+class OPDTrainer:
+    """Algorithm 2: expert-guided PPO training of the OPD policy."""
+
+    def __init__(self, pipe: Pipeline, make_env, *, ppo: PPOConfig | None = None,
+                 weights: QoSWeights | None = None, seed: int = 0):
+        self.pipe = pipe
+        self.make_env = make_env
+        self.ppo = ppo or PPOConfig()
+        self.expert = ExpertPolicy(pipe, weights)
+        self.sizes = head_sizes(pipe)
+        env = make_env(0)
+        self.params = init_policy(jax.random.PRNGKey(seed), env.state_dim,
+                                  self.sizes)
+        self.opt = adamw_init(self.params)
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.PRNGKey(seed + 1)
+        self.history = {"reward": [], "loss": [], "value_loss": [],
+                        "policy_loss": [], "entropy": [], "expert": []}
+        # replay memory D of expert transitions (Algorithm 2)
+        self.expert_states = np.zeros((0, env.state_dim), np.float32)
+        self.expert_actions = np.zeros((0, len(self.sizes)), np.int32)
+
+    def _rollout(self, env, use_expert: bool):
+        states, actions, logps, rewards, values = [], [], [], [], []
+        s = env.reset()
+        done = False
+        while not done:
+            s_j = jnp.asarray(s)
+            self.key, sub = jax.random.split(self.key)
+            if use_expert:
+                cfg = self.expert(env)
+                a = config_to_action(self.pipe, cfg)
+                logp, _, v = log_prob_entropy(
+                    self.params, s_j[None], jnp.asarray(a)[None])
+                logp, v = float(logp[0]), float(v[0])
+            else:
+                a_j, logp_j, v_j = sample_action(self.params, s_j, sub)
+                a = np.asarray(a_j)
+                cfg = action_to_config(self.pipe, a)
+                logp, v = float(logp_j), float(v_j)
+            s_next, r, done, info = env.step(cfg)
+            states.append(s)
+            actions.append(a)
+            logps.append(logp)
+            rewards.append(r)
+            values.append(v)
+            s = s_next
+        _, _, last_v = log_prob_entropy(
+            self.params, jnp.asarray(s)[None],
+            jnp.asarray(actions[-1])[None])
+        return (np.asarray(states, np.float32), np.asarray(actions, np.int32),
+                np.asarray(logps, np.float32), np.asarray(rewards, np.float32),
+                np.asarray(values, np.float32), float(last_v[0]))
+
+    def train_episode(self, episode_idx: int, *, env_seed: int | None = None):
+        cfg = self.ppo
+        use_expert = cfg.expert_freq > 0 and episode_idx % cfg.expert_freq == 0
+        env = self.make_env(env_seed if env_seed is not None else episode_idx)
+        states, actions, logps, rewards, values, last_v = self._rollout(
+            env, use_expert)
+        adv, returns = compute_gae(rewards * cfg.reward_scale, values, last_v,
+                                   gamma=cfg.gamma, lam=cfg.gae_lambda)
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+
+        if use_expert:          # store in replay memory D (Alg. 2)
+            self.expert_states = np.concatenate(
+                [self.expert_states, states])[-cfg.expert_buffer:]
+            self.expert_actions = np.concatenate(
+                [self.expert_actions, actions])[-cfg.expert_buffer:]
+
+        T = len(states)
+        losses, pls, vls, ents = [], [], [], []
+        for _ in range(cfg.epochs):
+            idx = self.rng.permutation(T)
+            for s0 in range(0, T, cfg.minibatch):
+                sel = idx[s0:s0 + cfg.minibatch]
+                # sample a fixed-size BC batch from D (dummy + coef 0 until
+                # the first expert episode fills it)
+                if len(self.expert_states):
+                    bsel = self.rng.integers(0, len(self.expert_states),
+                                             size=cfg.minibatch)
+                    bc_s = self.expert_states[bsel]
+                    bc_a = self.expert_actions[bsel]
+                    bc_c = cfg.bc_coef
+                else:
+                    bc_s = states[np.zeros(cfg.minibatch, np.int64)]
+                    bc_a = actions[np.zeros(cfg.minibatch, np.int64)]
+                    bc_c = 0.0
+                self.params, self.opt, loss, l_clip, l_vf, l_ent = \
+                    ppo_minibatch_update(
+                        self.params, self.opt,
+                        jnp.asarray(states[sel]), jnp.asarray(actions[sel]),
+                        jnp.asarray(logps[sel]), jnp.asarray(adv[sel]),
+                        jnp.asarray(returns[sel]),
+                        jnp.asarray(bc_s), jnp.asarray(bc_a),
+                        jnp.float32(bc_c),
+                        clip_eps=cfg.clip_eps, c1=cfg.c1, c2=cfg.c2, lr=cfg.lr)
+                losses.append(float(loss))
+                pls.append(float(l_clip))
+                vls.append(float(l_vf))
+                ents.append(float(l_ent))
+
+        self.history["reward"].append(float(rewards.mean()))
+        self.history["loss"].append(float(np.mean(losses)))
+        self.history["policy_loss"].append(float(np.mean(pls)))
+        self.history["value_loss"].append(float(np.mean(vls)))
+        self.history["entropy"].append(float(np.mean(ents)))
+        self.history["expert"].append(bool(use_expert))
+        return self.history
+
+    def train(self, n_episodes: int, *, log=None):
+        for e in range(1, n_episodes + 1):
+            self.train_episode(e)
+            if log:
+                log(f"episode {e}: reward={self.history['reward'][-1]:.3f} "
+                    f"loss={self.history['loss'][-1]:.4f} "
+                    f"vloss={self.history['value_loss'][-1]:.4f}"
+                    + (" [expert]" if self.history["expert"][-1] else ""))
+        return self.history

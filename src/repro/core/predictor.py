@@ -1,0 +1,102 @@
+"""LSTM workload predictor (paper §IV-A, Fig. 3).
+
+"predict the maximum workload for the next 20 seconds based on a time series
+of loads per second collected over the past 2 minutes. The model architecture
+includes a 25-unit LSTM layer followed by a one-unit dense output layer."
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.train import adamw_update, adamw_init
+
+HISTORY = 120
+HORIZON = 20
+HIDDEN = 25
+
+
+def init_predictor(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "lstm": nn.init_lstm(k1, 1, HIDDEN),
+        "out": nn.init_linear(k2, HIDDEN, 1, bias=True),
+    }
+
+
+@jax.jit
+def predict_batch(params, hist):
+    """hist [B, HISTORY] (normalised) -> predicted max load [B]."""
+    _, (hT, _) = nn.lstm_scan(params["lstm"], hist[..., None])
+    return nn.linear(params["out"], hT)[..., 0]
+
+
+def make_dataset(traces: list[np.ndarray], *, scale: float):
+    """Sliding windows -> (X [M, HISTORY], y [M]) normalised by ``scale``."""
+    xs, ys = [], []
+    for tr in traces:
+        for s in range(0, len(tr) - HISTORY - HORIZON):
+            xs.append(tr[s:s + HISTORY])
+            ys.append(tr[s + HISTORY:s + HISTORY + HORIZON].max())
+    X = np.asarray(xs, dtype=np.float32) / scale
+    y = np.asarray(ys, dtype=np.float32) / scale
+    return X, y
+
+
+@jax.jit
+def _train_step(params, opt, xb, yb, lr):
+    def loss_fn(p):
+        pred = predict_batch(p, xb)
+        return jnp.mean((pred - yb) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt = adamw_update(params, grads, opt, lr=lr, weight_decay=0.0)
+    return params, opt, loss
+
+
+def train_predictor(traces: list[np.ndarray], *, scale: float, epochs: int = 5,
+                    batch: int = 256, seed: int = 0, lr: float = 5e-3, log=None):
+    X, y = make_dataset(traces, scale=scale)
+    rng = np.random.default_rng(seed)
+    params = init_predictor(jax.random.PRNGKey(seed))
+    # start the output head at the target mean — removes the large constant
+    # bias error the optimizer would otherwise spend epochs walking off
+    params["out"]["b"] = params["out"]["b"] + float(y.mean())
+    opt = adamw_init(params)
+    n_steps = max(1, (len(X) - batch + 1 + batch - 1) // batch) * epochs
+    step = 0
+    for e in range(epochs):
+        idx = rng.permutation(len(X))
+        losses = []
+        for s in range(0, len(X) - batch + 1, batch):
+            sel = idx[s:s + batch]
+            # cosine decay to 10% of peak lr
+            cur_lr = lr * (0.55 + 0.45 * np.cos(np.pi * step / n_steps))
+            params, opt, loss = _train_step(params, opt, jnp.asarray(X[sel]),
+                                            jnp.asarray(y[sel]),
+                                            jnp.float32(cur_lr))
+            losses.append(float(loss))
+            step += 1
+        if log:
+            log(f"predictor epoch {e}: mse={np.mean(losses):.5f}")
+    return params
+
+
+def smape(params, traces: list[np.ndarray], *, scale: float) -> float:
+    """Symmetric mean absolute percentage error (paper reports ~6%)."""
+    X, y = make_dataset(traces, scale=scale)
+    pred = np.asarray(predict_batch(params, jnp.asarray(X)))
+    return float(np.mean(2.0 * np.abs(pred - y) /
+                         (np.abs(pred) + np.abs(y) + 1e-9)) * 100.0)
+
+
+def as_predictor_fn(params, *, scale: float):
+    """Adapter for PipelineEnv: load_history [HISTORY] -> predicted load."""
+    def fn(hist: np.ndarray) -> float:
+        h = jnp.asarray(hist[-HISTORY:], dtype=jnp.float32)[None] / scale
+        return float(predict_batch(params, h)[0]) * scale
+    return fn

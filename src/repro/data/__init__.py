@@ -1,0 +1,1 @@
+from repro.data.tokens import synthetic_lm_batches, synthetic_requests

@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (
+    dp_axes, param_shardings, batch_shardings, cache_shardings,
+    residual_constraint, replicated,
+)

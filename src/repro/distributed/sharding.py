@@ -1,0 +1,320 @@
+"""Sharding rules: architecture-aware PartitionSpecs for params, batches and
+caches on the production mesh (("pod",) "data", "model").
+
+Principles (baseline scheme — the §Perf hillclimb iterates from here):
+  * batch  -> ("pod","data")  (pure DP across pods)
+  * tensor parallel on "model": MLP d_ff (always divisible for the assigned
+    archs), attention heads when n_heads % model == 0, expert dim for MoE
+    when n_experts % model == 0 (else the per-expert d_ff), vocab when
+    divisible (else the embedding's d_model side — jit input shardings must
+    divide evenly, GSPMD padding is not available for arguments)
+  * residual stream sequence-sharded on "model" between layers (sequence
+    parallelism) for train/prefill
+  * decode KV caches sharded on the cache-length axis ("context parallel"
+    flash-decode style); SSM/xLSTM recurrent states sharded on heads/state
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import api
+from repro.models.config import ArchConfig, InputShape
+from repro.models.steps import batch_specs, cache_context
+
+
+def dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _leaf_rule(cfg: ArchConfig, M: int, path: str, shape: tuple,
+               kind: str = "train") -> tuple:
+    """PartitionSpec entries for a layer-local param leaf. ``kind`` selects
+    the 100B+ expert strategy: train/prefill gather FSDP-sharded weights at
+    the shard_map boundary (amortised over many tokens); decode keeps the
+    weights resident, two-axis sharded (E x d_ff), and psums activations."""
+    heads_ok = cfg.n_heads % M == 0
+    kv_ok = cfg.n_kv % M == 0
+    ff_ok = cfg.d_ff % M == 0 if cfg.d_ff else False
+    vocab_ok = cfg.vocab % M == 0
+    d_inner_ok = (2 * cfg.d_model) % M == 0
+
+    def none(nd):
+        return (None,) * nd
+
+    # --- embeddings / head ------------------------------------------------
+    if path.endswith("embed/e"):
+        return ("model", None) if vocab_ok else (None, "model")
+    if path.endswith("pos/e"):
+        return (None, "model")
+    if path.endswith("lm_head/w"):
+        return (None, "model") if vocab_ok else ("model", None)
+    if path.endswith("vis_proj/w"):
+        return (None, "model")
+
+    # --- attention ---------------------------------------------------------
+    if "attn" in path:
+        name = path.rsplit("/", 2)[-2]        # .../<proj>/w or /b
+        is_cross = "cross_attn" in path
+        k_ok = heads_ok if is_cross else kv_ok
+        if path.endswith("/w"):
+            if name == "wq":
+                return (None, "model") if heads_ok else none(2)
+            if name in ("wk", "wv"):
+                return (None, "model") if k_ok else none(2)
+            if name == "wo":
+                return ("model", None) if heads_ok else none(2)
+        if path.endswith("/b"):
+            if name == "wq":
+                return ("model",) if heads_ok else none(1)
+            if name in ("wk", "wv"):
+                return ("model",) if k_ok else none(1)
+            return none(1)                    # wo bias
+
+    # --- MoE ----------------------------------------------------------------
+    if "experts" in path:
+        # expert-parallel whenever E >= M (init pads E to a multiple of 16);
+        # far cheaper than slicing each expert's d_ff into M slivers.
+        # 100B+ models additionally shard the per-expert matrices over the
+        # data axis (FSDP-style weight gathering at the shard_map boundary)
+        # so params + ZeRO-1 moments fit HBM.
+        e_ok = cfg.n_experts >= M
+        big = cfg.param_count() > 1e11
+        fsdp = "data" if (big and kind != "decode") else None
+        ep2d = "data" if (big and kind == "decode") else None
+        if path.endswith("wg") or path.endswith("wu"):     # [E, d, ff]
+            if e_ok:
+                return ("model", fsdp, ep2d)
+            return (None, None, "model") if ff_ok else none(3)
+        if path.endswith("wd"):                            # [E, ff, d]
+            if e_ok:
+                return ("model", fsdp or ep2d, None)
+            return (None, "model", None) if ff_ok else none(3)
+    if "router" in path:
+        return none(len(shape))
+
+    # --- dense MLP -----------------------------------------------------------
+    if "mlp" in path or "ff_up" in path or "ff_dn" in path:
+        if path.endswith(("wg/w", "wu/w", "w1/w", "ff_up/w")):
+            return (None, "model") if ff_ok or "ff_up" in path else none(2)
+        if path.endswith(("wd/w", "w2/w", "ff_dn/w")):
+            return ("model", None) if ff_ok or "ff_dn" in path else none(2)
+        if path.endswith("w1/b"):
+            return ("model",) if ff_ok else none(1)
+        return none(len(shape))
+
+    # --- mamba ----------------------------------------------------------------
+    if "mamba" in path:
+        if path.endswith(("in_z/w", "in_x/w")):
+            return (None, "model") if d_inner_ok else none(2)
+        if path.endswith("out_proj/w"):
+            return ("model", None) if d_inner_ok else none(2)
+        return none(len(shape))
+
+    # --- xlstm -----------------------------------------------------------------
+    if "mlstm" in path:
+        if path.endswith("up/w"):
+            return (None, "model") if d_inner_ok and M % 2 == 0 else none(2)
+        if path.endswith(("wq/w", "wk/w", "wv/w")):
+            return (None, "model") if d_inner_ok else none(2)
+        if path.endswith("down/w"):
+            return ("model", None) if d_inner_ok else none(2)
+        return none(len(shape))
+    if "slstm" in path:
+        hid = int(4 / 3 * cfg.d_model)
+        if path.endswith("ff_up/w"):
+            return (None, "model") if hid % M == 0 else none(2)
+        if path.endswith("ff_dn/w"):
+            return ("model", None) if hid % M == 0 else none(2)
+        return none(len(shape))
+
+    return none(len(shape))
+
+
+def _scan_prefix(cfg: ArchConfig, path: str) -> int:
+    """Leading stacked-layer dims to skip: layers/ -> 1, mamba_layers/ -> 2
+    (xlstm uses a python list so its leaves carry no stacked dim)."""
+    if cfg.family == "ssm":
+        return 0
+    if path.startswith("mamba_layers"):
+        return 2
+    if path.startswith("layers"):
+        return 1
+    return 0
+
+
+def param_shardings(cfg: ArchConfig, mesh, *, multi_pod: bool = False,
+                    kind: str = "train"):
+    """NamedSharding pytree matching init_model's structure."""
+    M = mesh.shape["model"]
+    params_shape = jax.eval_shape(lambda k: api.init_model(k, cfg),
+                                  jax.random.PRNGKey(0))
+
+    def rule(path, leaf):
+        p = _path_str(path)
+        pre = _scan_prefix(cfg, p)
+        spec = _leaf_rule(cfg, M, p, leaf.shape[pre:], kind)
+        full = (None,) * pre + tuple(spec)
+        assert len(full) == len(leaf.shape), (p, leaf.shape, full)
+        # verify divisibility, fall back to replication otherwise
+        for dim, ax in zip(leaf.shape, full):
+            if ax is not None and dim % mesh.shape[ax] != 0:
+                return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(*full))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_shardings(cfg: ArchConfig, mesh, *, multi_pod: bool = False):
+    """ZeRO-1: Adam moments take the param sharding PLUS the data axis on
+    the first still-unsharded dim that divides it. The optimizer state is
+    the largest train-time allocation (2x fp32 vs bf16 params = 4x bytes);
+    sharding it over data costs one update-gather per step, which GSPMD
+    emits at the adamw_update boundary."""
+    M = mesh.shape["model"]
+    dp = dp_axes(multi_pod)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    params_shape = jax.eval_shape(lambda k: api.init_model(k, cfg),
+                                  jax.random.PRNGKey(0))
+
+    def rule(path, leaf):
+        p = _path_str(path)
+        pre = _scan_prefix(cfg, p)
+        spec = list((None,) * pre + tuple(_leaf_rule(cfg, M, p,
+                                                     leaf.shape[pre:])))
+        # fall back to replicated-base like param_shardings
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is not None and (dim % mesh.shape[ax] != 0
+                                   if isinstance(ax, str) else False):
+                spec = [None] * len(leaf.shape)
+                break
+        used = {a for s in spec if s is not None
+                for a in ((s,) if isinstance(s, str) else s)}
+        free_dp = tuple(a for a in dp if a not in used)
+        free_size = 1
+        for a in free_dp:
+            free_size *= mesh.shape[a]
+        if free_dp:
+            for i in range(pre, len(spec)):
+                if spec[i] is None and leaf.shape[i] % free_size == 0 \
+                        and leaf.shape[i] >= free_size:
+                    spec[i] = free_dp
+                    break
+        # validate composite dims
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            if dim % n != 0:
+                return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def batch_shardings(cfg: ArchConfig, shape: InputShape, mesh, *,
+                    multi_pod: bool = False):
+    dp = dp_axes(multi_pod)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    bdim = dp if shape.global_batch % dp_size == 0 else None
+    specs = batch_specs(cfg, shape)
+    return {k: NamedSharding(mesh, P(bdim, *(None,) * (len(v.shape) - 1)))
+            for k, v in specs.items()}
+
+
+def cache_shardings(cfg: ArchConfig, shape: InputShape, mesh, *,
+                    multi_pod: bool = False):
+    """Shardings matching init_cache's pytree for decode shapes."""
+    M = mesh.shape["model"]
+    dp = dp_axes(multi_pod)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    B = shape.global_batch
+    bdim = dp if B % dp_size == 0 else None
+    ctx = cache_context(cfg, shape)
+    cache_shape = jax.eval_shape(
+        lambda: api.init_cache(cfg, B, max(ctx, 1)))
+
+    def rule(path, leaf):
+        p = _path_str(path)
+        nd = len(leaf.shape)
+        if p.endswith("pos"):
+            return NamedSharding(mesh, P(bdim))
+        if cfg.family in ("dense", "moe", "vlm"):
+            # k/v [L, B, C, kv, hd] — shard cache length ("context parallel")
+            spec = [None, bdim, "model" if leaf.shape[2] % M == 0 else None,
+                    None, None]
+            return NamedSharding(mesh, P(*spec))
+        if cfg.family == "audio":
+            if p.startswith(("ck", "cv")):     # [L, B, enc, H, hd]
+                return NamedSharding(mesh, P(None, bdim, None, None, None))
+            return NamedSharding(mesh, P(
+                None, bdim, "model" if leaf.shape[2] % M == 0 else None,
+                None, None))
+        if cfg.family == "hybrid":
+            if p.startswith(("k", "v")):       # [G, B, C, kv, hd]
+                return NamedSharding(mesh, P(
+                    None, bdim, "model" if leaf.shape[2] % M == 0 else None,
+                    None, None))
+            if p.startswith("ssm"):            # [G, per, B, H, Pd, N]
+                spec = [None, None, bdim,
+                        "model" if leaf.shape[3] % M == 0 else None, None, None]
+                return NamedSharding(mesh, P(*spec))
+            return NamedSharding(mesh, P(None, None, bdim,
+                                         *(None,) * (nd - 3)))
+        if cfg.family == "ssm":
+            # per-layer states: [B, H, ...P...] — shard the state dim
+            if nd >= 3 and leaf.shape[2] % M == 0:
+                return NamedSharding(mesh, P(bdim, None, "model",
+                                             *(None,) * (nd - 3)))
+            return NamedSharding(mesh, P(bdim, *(None,) * (nd - 1)))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def residual_constraint(cfg: ArchConfig, shape: InputShape, mesh, *,
+                        multi_pod: bool = False):
+    """shard_h callback: sequence-parallel residual stream between layers."""
+    dp = dp_axes(multi_pod)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    M = mesh.shape["model"]
+    bdim = dp if shape.global_batch % dp_size == 0 else None
+    seq = shape.seq_len
+    sdim = "model" if seq % M == 0 else None
+
+    def shard_h(h):
+        if h.ndim != 3 or h.shape[1] % M != 0:
+            return jax.lax.with_sharding_constraint(
+                h, NamedSharding(mesh, P(bdim, None, None)))
+        return jax.lax.with_sharding_constraint(
+            h, NamedSharding(mesh, P(bdim, sdim, None)))
+
+    return shard_h

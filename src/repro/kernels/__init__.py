@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the serving data plane (validated in interpret
+mode on CPU): flash_attention (prefill) and decode_attention (GQA decode
+against long KV caches). ops.py = jit wrappers, ref.py = jnp oracles."""
+from repro.kernels import ops, ref

@@ -1,0 +1,63 @@
+"""Serving launcher: batched single-token decode against a KV cache — the
+data plane the OPD controller manages.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        [--batch 4] [--context 128] [--tokens 32]
+
+Runs prefill once to populate the cache, then streams decode steps. On TPU
+the same serve_step is what launch/dryrun.py compiles for the decode_32k /
+long_500k shapes of the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import api
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=sorted(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--context", type=int, default=128)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].smoke() if args.smoke else ARCHS[args.arch]
+    if cfg.enc_len:
+        raise SystemExit("use whisper decode via models.api directly; the "
+                         "serve launcher drives decoder-only archs")
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B = args.batch
+
+    cache = api.init_cache(cfg, B, args.context)
+    decode = jax.jit(lambda p, b, c: api.decode_step(p, b, c, cfg),
+                     donate_argnums=(2,))
+
+    tok = jnp.asarray(rng.integers(1, cfg.vocab, (B, 1)), dtype=jnp.int32)
+    out_tokens = []
+    t0 = time.time()
+    for i in range(args.tokens):
+        logits, cache = decode(params, {"tokens": tok}, cache)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out_tokens.append(np.asarray(tok)[:, 0])
+        if i == 0:
+            print(f"first token (incl. compile): {time.time() - t0:.2f}s")
+    dt = time.time() - t0
+    toks = B * args.tokens
+    print(f"decoded {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s, batch {B})")
+    print("sample:", np.stack(out_tokens, 1)[0][:16])
+
+
+if __name__ == "__main__":
+    main()

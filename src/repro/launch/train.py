@@ -1,0 +1,60 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --steps 50 \
+        [--smoke] [--batch 8] [--seq-len 256] [--microbatch 2]
+
+On the dev box this runs the REAL train step (reduced config with --smoke);
+on a TPU slice the same code path shards over the production mesh — the
+only difference is the mesh construction and in_shardings, which are the
+exact objects the multi-pod dry-run compiles (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.data.tokens import synthetic_lm_batches
+from repro.models import api, steps
+from repro.train import adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced config (default on CPU dev boxes)")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].smoke() if args.smoke else ARCHS[args.arch]
+    print(f"{cfg.name}: {cfg.param_count() / 1e6:.1f}M params on "
+          f"{jax.device_count()} device(s)")
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    train = jax.jit(steps.make_train_step(cfg, lr=args.lr,
+                                          microbatch=args.microbatch),
+                    donate_argnums=(0, 1))
+    data = synthetic_lm_batches(vocab=cfg.vocab, seq_len=args.seq_len,
+                                batch=args.batch, seed=0)
+    t0 = time.time()
+    for step in range(1, args.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, metrics = train(params, opt, batch)
+        if step % 10 == 0 or step == 1:
+            print(f"step {step:4d} loss={float(metrics['loss']):8.4f} "
+                  f"grad_norm={float(metrics['grad_norm']):7.3f} "
+                  f"({(time.time() - t0) / step:.2f}s/step)")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Family-dispatched model API.
+
+    init_model(key, cfg)                      -> params
+    forward(params, batch, cfg, ...)          -> (logits, aux)
+    init_cache(cfg, batch, context)           -> cache pytree
+    decode_step(params, batch, cache, cfg)    -> (logits, new_cache)
+"""
+from __future__ import annotations
+
+from repro.models import decoder, whisper, zamba, xlstm_lm
+from repro.models.config import ArchConfig
+
+
+def _mod(cfg: ArchConfig):
+    if cfg.family == "audio":
+        return whisper
+    if cfg.family == "hybrid":
+        return zamba
+    if cfg.family == "ssm":
+        return xlstm_lm
+    return decoder          # dense | moe | vlm
+
+
+def init_model(key, cfg: ArchConfig):
+    return _mod(cfg).init_model(key, cfg)
+
+
+def forward(params, batch, cfg: ArchConfig, **kw):
+    return _mod(cfg).forward(params, batch, cfg, **kw)
+
+
+def init_cache(cfg: ArchConfig, batch: int, context: int, **kw):
+    return _mod(cfg).init_cache(cfg, batch, context, **kw)
+
+
+def decode_step(params, batch, cache, cfg: ArchConfig, **kw):
+    return _mod(cfg).decode_step(params, batch, cache, cfg, **kw)

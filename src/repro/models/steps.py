@@ -1,0 +1,162 @@
+"""Step-function factories (train / prefill / serve) and abstract input specs.
+
+The same factories serve the CPU smoke tests (concrete arrays) and the
+multi-pod dry-run (ShapeDtypeStructs + shardings via jax.jit lower/compile).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api, whisper
+from repro.models.config import ArchConfig, InputShape, LONG_WINDOW
+from repro.train import (adamw_init, adamw_update, chunked_lm_head_loss,
+                         clip_by_global_norm, lm_loss)
+
+
+# --------------------------------------------------------------- specs ----
+
+def _f(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def text_len(cfg: ArchConfig, seq_len: int) -> int:
+    return seq_len - cfg.n_patches if cfg.family == "vlm" else seq_len
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape):
+    """ShapeDtypeStructs for the step's ``batch`` argument."""
+    B, S = shape.global_batch, shape.seq_len
+    act_dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        specs = {"tokens": _f((B, 1), jnp.int32)}
+    else:
+        specs = {"tokens": _f((B, text_len(cfg, S)), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = _f((B, cfg.n_patches, cfg.d_model), act_dt)
+        if cfg.family == "audio":
+            # decode reads the cross-attention KV from the cache instead
+            specs["enc_states"] = _f((B, cfg.enc_len, cfg.d_model), act_dt)
+    if shape.kind == "train":
+        specs["labels"] = _f((B, S), jnp.int32)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape):
+    """Abstract KV/state cache for decode shapes (context already consumed)."""
+    assert shape.kind == "decode"
+    context = cache_context(cfg, shape)
+    cache = jax.eval_shape(partial(api.init_cache, cfg, shape.global_batch, context))
+    return cache
+
+
+def cache_context(cfg: ArchConfig, shape: InputShape) -> int:
+    """Attention-cache length: full context, or ring window for long decode."""
+    if cfg.family in ("ssm",):
+        return 0                                    # pure recurrent state
+    if shape.seq_len > 65_536:
+        return LONG_WINDOW                          # ring-buffer sliding window
+    return shape.seq_len
+
+
+def uses_ring(cfg: ArchConfig, shape: InputShape) -> bool:
+    return shape.kind == "decode" and cfg.family != "ssm" and shape.seq_len > 65_536
+
+
+# --------------------------------------------------------------- steps ----
+
+def make_train_step(cfg: ArchConfig, *, lr: float = 3e-4, shard_h=None,
+                    microbatch: int | None = None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatch`` = number of gradient-accumulation chunks: activations for
+    only one chunk are live at a time (a lax.scan over chunks), cutting peak
+    activation memory ~microbatch-fold for large models."""
+
+    def loss_fn(params, batch):
+        # lm_head is fused into the sequence-chunked loss so the [B, S, V]
+        # logits tensor never materialises (13-33 GB/device at S=4k).
+        # labels are [B, S_total]; vision positions carry -100 (set by the
+        # data pipeline) so VLM prefix tokens are ignored by the loss.
+        h, aux = api.forward(params, batch, cfg, shard_h=shard_h,
+                             return_hidden=True)
+        loss, metrics = chunked_lm_head_loss(params["lm_head"], h,
+                                             batch["labels"],
+                                             lb_loss=aux["lb_loss"])
+        return loss, metrics
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        if microbatch and microbatch > 1 and B % microbatch == 0:
+            mbs = jax.tree.map(
+                lambda t: t.reshape(microbatch, B // microbatch, *t.shape[1:]),
+                batch)
+
+            def acc(carry, mb):
+                loss_s, grads_s = carry
+                (loss, metrics), grads = grads_of(params, mb)
+                grads_s = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), grads_s, grads)
+                return (loss_s + loss, grads_s), metrics
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), metrics = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), g0), mbs)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, shard_h=None):
+    """(params, batch) -> (last-token logits, populated cache or aux)."""
+
+    def prefill_step(params, batch):
+        if cfg.family == "audio":
+            logits, aux = whisper.forward(params, batch, cfg, shard_h=shard_h)
+            cache = whisper.prefill_cache(params, batch, cfg,
+                                          batch["tokens"].shape[1])
+            return logits[:, -1], cache
+        if cfg.family in ("dense", "moe", "vlm"):
+            from repro.models import decoder
+            logits, aux, cache = decoder.forward(params, batch, cfg,
+                                                 shard_h=shard_h, collect_cache=True)
+            return logits[:, -1], cache
+        # ssm/hybrid prefill: forward only (states would come from scan carries)
+        logits, aux = api.forward(params, batch, cfg, shard_h=shard_h)
+        return logits[:, -1], aux
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, shape: InputShape):
+    """(params, batch, cache) -> (logits [B, 1, V], new_cache)."""
+    ring = uses_ring(cfg, shape)
+    window = LONG_WINDOW if ring else None
+    dec_cfg = cfg.replace(window=window) if ring else cfg
+
+    def serve_step(params, batch, cache):
+        return api.decode_step(params, batch, cache, dec_cfg, ring=ring)
+
+    return serve_step
+
+
+def make_step(cfg: ArchConfig, shape: InputShape, **kw):
+    if shape.kind == "train":
+        return make_train_step(cfg, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, **kw)
+    return make_serve_step(cfg, shape)

@@ -1,0 +1,148 @@
+"""Whisper-style decoder (audio family). The mel/conv encoder frontend is a
+STUB — input_specs() supplies encoder frame embeddings [B, enc_len, d]; this
+module implements the decoder backbone (self-attn + cross-attn + GELU MLP,
+learned positions, pre-LayerNorm).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.models.config import ArchConfig
+
+MAX_POSITIONS = 4096  # learned table; whisper itself uses 448 target positions
+
+
+def init_layer(key, cfg: ArchConfig):
+    dt = cfg.param_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln_self": nn.init_layernorm(cfg.d_model, dtype=dt),
+        "self_attn": nn.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                       cfg.head_dim, dtype=dt, qkv_bias=True),
+        "ln_cross": nn.init_layernorm(cfg.d_model, dtype=dt),
+        "cross_attn": nn.init_attention(k2, cfg.d_model, cfg.n_heads, cfg.n_heads,
+                                        cfg.head_dim, dtype=dt, qkv_bias=True),
+        "ln_mlp": nn.init_layernorm(cfg.d_model, dtype=dt),
+        "mlp": nn.init_mlp(k3, cfg.d_model, cfg.d_ff, kind="gelu", dtype=dt),
+    }
+
+
+def init_model(key, cfg: ArchConfig):
+    dt = cfg.param_dtype
+    k_emb, k_pos, k_layers, k_head = jax.random.split(key, 4)
+    return {
+        "embed": nn.init_embedding(k_emb, cfg.vocab, cfg.d_model, dtype=dt),
+        "pos": nn.init_embedding(k_pos, MAX_POSITIONS, cfg.d_model, dtype=dt),
+        "layers": jax.vmap(partial(init_layer, cfg=cfg))(jax.random.split(k_layers, cfg.n_layers)),
+        "ln_f": nn.init_layernorm(cfg.d_model, dtype=dt),
+        "lm_head": nn.init_linear(k_head, cfg.d_model, cfg.vocab, dtype=dt),
+    }
+
+
+def _cross_kv(lp, enc, cfg: ArchConfig):
+    B, T, _ = enc.shape
+    k = nn.linear(lp["cross_attn"]["wk"], enc).reshape(B, T, cfg.n_heads, cfg.head_dim)
+    v = nn.linear(lp["cross_attn"]["wv"], enc).reshape(B, T, cfg.n_heads, cfg.head_dim)
+    return k, v
+
+
+def _cross_apply(lp, x, ck, cv, cfg: ArchConfig):
+    B, S, _ = x.shape
+    q = nn.linear(lp["cross_attn"]["wq"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    from repro.nn.attention import _sdpa
+    mask = jnp.ones((1, 1, 1, S, ck.shape[1]), dtype=bool)
+    out = _sdpa(q, ck, cv, mask).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return nn.linear(lp["cross_attn"]["wo"], out)
+
+
+def forward(params, batch, cfg: ArchConfig, *, window=None, shard_h=None,
+            last_only: bool = False, return_hidden: bool = False):
+    """Teacher-forced decode over a full target sequence. batch: tokens [B,S],
+    enc_states [B, enc_len, d]."""
+    tokens = batch["tokens"]
+    enc = batch["enc_states"].astype(cfg.param_dtype)
+    B, S = tokens.shape
+    pos_ids = jnp.arange(S, dtype=jnp.int32) % MAX_POSITIONS
+    h = nn.embedding(params["embed"], tokens) + nn.embedding(params["pos"], pos_ids)[None]
+
+    def body(carry, lp):
+        hh = carry
+        if shard_h is not None:
+            hh = shard_h(hh)
+        a, _ = nn.attention_prefill(
+            lp["self_attn"], nn.layernorm(lp["ln_self"], hh),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+            rope_theta=None, window=window, use_flash=cfg.use_flash)
+        hh = hh + a
+        ck, cv = _cross_kv(lp, enc, cfg)
+        hh = hh + _cross_apply(lp, nn.layernorm(lp["ln_cross"], hh), ck, cv, cfg)
+        hh = hh + nn.mlp(lp["mlp"], nn.layernorm(lp["ln_mlp"], hh), kind="gelu")
+        if shard_h is not None:
+            hh = shard_h(hh)
+        return hh, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    if last_only:
+        h = h[:, -1:]
+    h = nn.layernorm(params["ln_f"], h)
+    aux = {"lb_loss": jnp.zeros((), jnp.float32), "dropped_frac": jnp.zeros((), jnp.float32)}
+    if return_hidden:          # train fuses lm_head into the chunked loss
+        return h, aux
+    logits = nn.linear(params["lm_head"], h)
+    return logits, aux
+
+
+def init_cache(cfg: ArchConfig, batch: int, context: int, *, dtype=None):
+    dt = dtype or cfg.param_dtype
+    # distinct buffers per leaf — the serve step donates the cache and
+    # aliased leaves would be donated twice
+    sh = (cfg.n_layers, batch, context, cfg.n_kv, cfg.head_dim)
+    shc = (cfg.n_layers, batch, cfg.enc_len, cfg.n_heads, cfg.head_dim)
+    return {"k": jnp.zeros(sh, dtype=dt), "v": jnp.zeros(sh, dtype=dt),
+            "ck": jnp.zeros(shc, dtype=dt), "cv": jnp.zeros(shc, dtype=dt),
+            "pos": jnp.zeros((batch,), dtype=jnp.int32)}
+
+
+def prefill_cache(params, batch, cfg: ArchConfig, context: int):
+    """Populate the cross-attention KV from encoder states (done once)."""
+    enc = batch["enc_states"].astype(cfg.param_dtype)
+
+    def per_layer(lp):
+        return _cross_kv(lp, enc, cfg)
+
+    ck, cv = jax.vmap(per_layer)(params["layers"])
+    cache = init_cache(cfg, enc.shape[0], context)
+    return {**cache, "ck": ck, "cv": cv}
+
+
+def decode_step(params, batch, cache, cfg: ArchConfig, *, ring: bool = False):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    pos_ids = (pos % MAX_POSITIONS)[:, None]
+    h = nn.embedding(params["embed"], tokens) + nn.embedding(params["pos"], pos_ids)
+
+    def body(carry, xs):
+        hh = carry
+        lp, ck_self, cv_self, ck_x, cv_x = xs
+        layer_cache = {"k": ck_self, "v": cv_self, "pos": pos}
+        a, new_c = nn.attention_decode(
+            lp["self_attn"], nn.layernorm(lp["ln_self"], hh), layer_cache,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+            rope_theta=None, ring=ring, use_flash=cfg.use_flash)
+        hh = hh + a
+        hh = hh + _cross_apply(lp, nn.layernorm(lp["ln_cross"], hh), ck_x, cv_x, cfg)
+        hh = hh + nn.mlp(lp["mlp"], nn.layernorm(lp["ln_mlp"], hh), kind="gelu")
+        return hh, (new_c["k"], new_c["v"])
+
+    h, (ks, vs) = jax.lax.scan(
+        body, h, (params["layers"], cache["k"], cache["v"], cache["ck"], cache["cv"]))
+    h = nn.layernorm(params["ln_f"], h)
+    logits = nn.linear(params["lm_head"], h)
+    return logits, {"k": ks, "v": vs, "ck": cache["ck"], "cv": cache["cv"], "pos": pos + 1}

@@ -1,0 +1,89 @@
+"""xLSTM LM (ssm family): stack of mLSTM blocks with every ``slstm_every``-th
+layer an sLSTM block. Only 12 layers — the heterogeneous stack is a Python
+loop (HLO stays small; the sequence dimension is scanned inside each block).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.models.config import ArchConfig
+
+
+def is_slstm(cfg: ArchConfig, i: int) -> bool:
+    return cfg.slstm_every > 0 and (i + 1) % cfg.slstm_every == 0
+
+
+def init_model(key, cfg: ArchConfig):
+    dt = cfg.param_dtype
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = []
+    for i, k in enumerate(keys):
+        if is_slstm(cfg, i):
+            layers.append({"ln": nn.init_rmsnorm(cfg.d_model, dtype=dt),
+                           "slstm": nn.init_slstm(k, cfg.d_model, cfg.n_heads, dtype=dt)})
+        else:
+            layers.append({"ln": nn.init_rmsnorm(cfg.d_model, dtype=dt),
+                           "mlstm": nn.init_mlstm(k, cfg.d_model, cfg.n_heads, dtype=dt)})
+    return {
+        "embed": nn.init_embedding(k_emb, cfg.vocab, cfg.d_model, dtype=dt),
+        "layers": layers,
+        "ln_f": nn.init_rmsnorm(cfg.d_model, dtype=dt),
+        "lm_head": nn.init_linear(k_head, cfg.d_model, cfg.vocab, dtype=dt),
+    }
+
+
+def forward(params, batch, cfg: ArchConfig, *, window=None, shard_h=None,
+            last_only: bool = False, return_hidden: bool = False):
+    h = nn.embedding(params["embed"], batch["tokens"])
+    for i, lp in enumerate(params["layers"]):
+        if shard_h is not None:
+            h = shard_h(h)
+
+        if is_slstm(cfg, i):
+            def blk(x, lp=lp):
+                return x + nn.slstm_scan(lp["slstm"], nn.rmsnorm(lp["ln"], x),
+                                         n_heads=cfg.n_heads)
+        else:
+            def blk(x, lp=lp):
+                # chunkwise form: O(S*chunk) memory instead of O(S^2)
+                return x + nn.mlstm_chunkwise(lp["mlstm"], nn.rmsnorm(lp["ln"], x),
+                                              n_heads=cfg.n_heads)
+        h = jax.checkpoint(blk)(h) if cfg.remat else blk(h)
+    if last_only:
+        h = h[:, -1:]
+    h = nn.rmsnorm(params["ln_f"], h)
+    aux = {"lb_loss": jnp.zeros((), jnp.float32), "dropped_frac": jnp.zeros((), jnp.float32)}
+    if return_hidden:          # train fuses lm_head into the chunked loss
+        return h, aux
+    logits = nn.linear(params["lm_head"], h)
+    return logits, aux
+
+
+def init_cache(cfg: ArchConfig, batch: int, context: int, *, dtype=None):
+    states = []
+    for i in range(cfg.n_layers):
+        if is_slstm(cfg, i):
+            states.append(nn.make_slstm_state(batch, cfg.d_model, cfg.n_heads))
+        else:
+            states.append(nn.make_mlstm_state(batch, cfg.d_model, cfg.n_heads))
+    return {"states": states, "pos": jnp.zeros((batch,), dtype=jnp.int32)}
+
+
+def decode_step(params, batch, cache, cfg: ArchConfig, *, ring: bool = False):
+    h = nn.embedding(params["embed"], batch["tokens"])
+    new_states = []
+    for i, (lp, st) in enumerate(zip(params["layers"], cache["states"])):
+        if is_slstm(cfg, i):
+            y, new = nn.slstm_decode(lp["slstm"], nn.rmsnorm(lp["ln"], h), st,
+                                     n_heads=cfg.n_heads)
+        else:
+            y, new = nn.mlstm_decode(lp["mlstm"], nn.rmsnorm(lp["ln"], h), st,
+                                     n_heads=cfg.n_heads)
+        h = h + y
+        new_states.append(new)
+    h = nn.rmsnorm(params["ln_f"], h)
+    logits = nn.linear(params["lm_head"], h)
+    return logits, {"states": new_states, "pos": cache["pos"] + 1}

@@ -1,0 +1,148 @@
+"""Zamba2-style hybrid (hybrid family): Mamba2 backbone with a SHARED
+attention+MLP block applied every ``attn_every`` mamba layers.
+
+Structure: the layer stack is grouped — scan over n_groups groups, each group
+= one shared-attention application (weights shared across groups, per-group
+KV cache) followed by an inner scan over ``attn_every`` stacked mamba layers.
+This keeps HLO O(1) in depth and allocates KV cache only for the attention
+applications (9 for the 54-layer config), not all 54 layers.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.nn.mamba2 import CONV_K
+from repro.models.config import ArchConfig
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_model(key, cfg: ArchConfig):
+    dt = cfg.param_dtype
+    k_emb, k_shared, k_mlp, k_mamba, k_head = jax.random.split(key, 5)
+    G = n_groups(cfg)
+
+    def init_mamba_layer(k):
+        return {
+            "ln": nn.init_rmsnorm(cfg.d_model, dtype=dt),
+            "mamba": nn.init_mamba2(k, cfg.d_model, n_heads=cfg.n_heads,
+                                    d_state=cfg.ssm_state, dtype=dt),
+        }
+
+    keys = jax.random.split(k_mamba, cfg.n_layers).reshape(G, cfg.attn_every, 2)
+    mamba_layers = jax.vmap(jax.vmap(init_mamba_layer))(keys)
+    return {
+        "embed": nn.init_embedding(k_emb, cfg.vocab, cfg.d_model, dtype=dt),
+        "shared": {   # ONE shared attention+MLP block (zamba's weight sharing)
+            "ln_attn": nn.init_rmsnorm(cfg.d_model, dtype=dt),
+            "attn": nn.init_attention(k_shared, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                      cfg.head_dim, dtype=dt),
+            "ln_mlp": nn.init_rmsnorm(cfg.d_model, dtype=dt),
+            "mlp": nn.init_mlp(k_mlp, cfg.d_model, cfg.d_ff, kind="swiglu", dtype=dt),
+        },
+        "mamba_layers": mamba_layers,      # leaves [G, attn_every, ...]
+        "ln_f": nn.init_rmsnorm(cfg.d_model, dtype=dt),
+        "lm_head": nn.init_linear(k_head, cfg.d_model, cfg.vocab, dtype=dt),
+    }
+
+
+def _shared_block(sp, h, cfg: ArchConfig, *, window=None):
+    a, _ = nn.attention_prefill(
+        sp["attn"], nn.rmsnorm(sp["ln_attn"], h),
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, window=window, use_flash=cfg.use_flash)
+    h = h + a
+    return h + nn.mlp(sp["mlp"], nn.rmsnorm(sp["ln_mlp"], h), kind="swiglu")
+
+
+def forward(params, batch, cfg: ArchConfig, *, window=None, shard_h=None,
+            last_only: bool = False, return_hidden: bool = False):
+    h = nn.embedding(params["embed"], batch["tokens"])
+    sp = params["shared"]
+
+    def group_body(carry, group_params):
+        hh = carry
+        if shard_h is not None:
+            hh = shard_h(hh)
+        hh = _shared_block(sp, hh, cfg, window=window)
+
+        def mamba_body(c, lp):
+            y = nn.mamba2_scan(lp["mamba"], nn.rmsnorm(lp["ln"], c),
+                               n_heads=cfg.n_heads, d_state=cfg.ssm_state)
+            return c + y, None
+
+        hh, _ = jax.lax.scan(mamba_body, hh, group_params)
+        if shard_h is not None:
+            hh = shard_h(hh)
+        return hh, None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body)
+    h, _ = jax.lax.scan(group_body, h, params["mamba_layers"])
+    if last_only:
+        h = h[:, -1:]
+    h = nn.rmsnorm(params["ln_f"], h)
+    aux = {"lb_loss": jnp.zeros((), jnp.float32), "dropped_frac": jnp.zeros((), jnp.float32)}
+    if return_hidden:          # train fuses lm_head into the chunked loss
+        return h, aux
+    logits = nn.linear(params["lm_head"], h)
+    return logits, aux
+
+
+def init_cache(cfg: ArchConfig, batch: int, context: int, *, dtype=None):
+    dt = dtype or cfg.param_dtype
+    G = n_groups(cfg)
+    sh = (G, batch, context, cfg.n_kv, cfg.head_dim)
+    d_inner = 2 * cfg.d_model
+    P = d_inner // cfg.n_heads
+    return {
+        # distinct buffers per leaf (the serve step donates the cache)
+        "k": jnp.zeros(sh, dtype=dt), "v": jnp.zeros(sh, dtype=dt),
+        "ssm": jnp.zeros((G, cfg.attn_every, batch, cfg.n_heads, P, cfg.ssm_state),
+                         dtype=jnp.float32),
+        "conv": jnp.zeros((G, cfg.attn_every, batch, CONV_K - 1,
+                           d_inner + 2 * cfg.ssm_state), dtype=dt),
+        "pos": jnp.zeros((batch,), dtype=jnp.int32),
+    }
+
+
+def decode_step(params, batch, cache, cfg: ArchConfig, *, ring: bool = False):
+    h = nn.embedding(params["embed"], batch["tokens"])
+    sp = params["shared"]
+    pos = cache["pos"]
+
+    def group_body(carry, xs):
+        hh = carry
+        gp, ck, cv, ssm, conv = xs
+        layer_cache = {"k": ck, "v": cv, "pos": pos}
+        a, new_c = nn.attention_decode(
+            sp["attn"], nn.rmsnorm(sp["ln_attn"], hh), layer_cache,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, ring=ring, use_flash=cfg.use_flash)
+        hh = hh + a
+        hh = hh + nn.mlp(sp["mlp"], nn.rmsnorm(sp["ln_mlp"], hh), kind="swiglu")
+
+        def mamba_body(c, xs2):
+            lp, st_ssm, st_conv = xs2
+            y, new_st = nn.mamba2_decode(
+                lp["mamba"], nn.rmsnorm(lp["ln"], c),
+                {"ssm": st_ssm, "conv": st_conv},
+                n_heads=cfg.n_heads, d_state=cfg.ssm_state)
+            return c + y, (new_st["ssm"], new_st["conv"])
+
+        hh, (new_ssm, new_conv) = jax.lax.scan(mamba_body, hh, (gp, ssm, conv))
+        return hh, (new_c["k"], new_c["v"], new_ssm, new_conv)
+
+    h, (ks, vs, ssms, convs) = jax.lax.scan(
+        group_body, h,
+        (params["mamba_layers"], cache["k"], cache["v"], cache["ssm"], cache["conv"]))
+    h = nn.rmsnorm(params["ln_f"], h)
+    logits = nn.linear(params["lm_head"], h)
+    return logits, {"k": ks, "v": vs, "ssm": ssms, "conv": convs, "pos": pos + 1}

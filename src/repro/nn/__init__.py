@@ -1,0 +1,23 @@
+"""Parameter-pytree neural-net library (no external deps beyond jax).
+
+Every module is a pair of functions:
+    init_<mod>(key, ...) -> params   (a dict pytree of jnp arrays)
+    <mod>(params, x, ...) -> y
+
+Layer stacks are built by vmapping init over a key batch and scanning apply.
+"""
+from repro.nn.linear import init_linear, linear, init_embedding, embedding
+from repro.nn.norms import init_rmsnorm, rmsnorm, init_layernorm, layernorm
+from repro.nn.rope import rope_frequencies, apply_rope
+from repro.nn.mlp import init_mlp, mlp
+from repro.nn.attention import (
+    init_attention, attention_prefill, attention_decode, make_kv_cache,
+)
+from repro.nn.moe import init_moe, moe
+from repro.nn.mamba2 import init_mamba2, mamba2_scan, mamba2_decode, make_mamba_state
+from repro.nn.xlstm import (
+    init_mlstm, mlstm_parallel, mlstm_chunkwise, mlstm_decode, make_mlstm_state,
+    init_slstm, slstm_scan, slstm_decode, make_slstm_state,
+)
+from repro.nn.lstm import init_lstm, lstm_scan
+from repro.nn.resnet import init_resblock, resblock, init_res_mlp, res_mlp

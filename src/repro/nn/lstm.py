@@ -1,0 +1,34 @@
+"""Plain LSTM (for the OPD workload predictor — paper §IV-A: 25-unit LSTM
+followed by a one-unit dense layer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import init_linear, linear
+
+
+def init_lstm(key, in_dim: int, hidden: int, *, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wx": init_linear(k1, in_dim, 4 * hidden, bias=True, dtype=dtype),
+        "wh": init_linear(k2, hidden, 4 * hidden, dtype=dtype),
+    }
+
+
+def lstm_scan(params, x):
+    """x [B, T, in_dim] -> (h_seq [B, T, H], (h_T, c_T))."""
+    B, T, _ = x.shape
+    H = params["wh"]["w"].shape[0]
+
+    def step(carry, x_t):
+        h, c = carry
+        z = linear(params["wx"], x_t) + linear(params["wh"], h)
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((B, H), dtype=x.dtype)
+    (hT, cT), hs = jax.lax.scan(step, (h0, h0), jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), (hT, cT)

@@ -1,0 +1,180 @@
+"""Mamba2 (SSD) block — chunked state-space scan for training/prefill and a
+single-step recurrence for decode.
+
+Simplified-but-faithful SSD: per head h, state H_t in R^{P x N}:
+    H_t = exp(dt_t * a_h) * H_{t-1} + dt_t * x_t B_t^T        (outer product)
+    y_t = C_t^T H_t ... -> y_t[p] = sum_n H_t[p, n] C_t[n]
+with x projected to heads of dim P, B/C of dim N shared across heads (MVA,
+"multi-value attention" analog of GQA in Mamba2), scalar per-head decay a_h,
+softplus-positive per-token-per-head dt, causal depthwise conv on (x, B, C),
+gated output (z branch) and RMSNorm before out-projection.
+
+The sequence scan is chunked: within a chunk the contribution is computed with
+dense einsums (quadratic in chunk length — MXU-friendly), across chunks a
+lax.scan carries the [P, N] state. This keeps peak memory at
+O(chunk^2 + P*N) instead of O(T * P * N) for a naive associative scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import init_linear, linear
+from repro.nn.norms import init_rmsnorm, rmsnorm
+
+CONV_K = 4  # depthwise conv kernel width
+
+
+def init_mamba2(key, dim: int, *, expand: int = 2, n_heads: int, d_state: int,
+                dtype=jnp.float32):
+    d_inner = expand * dim
+    assert d_inner % n_heads == 0
+    ks = jax.random.split(key, 6)
+    conv_dim = d_inner + 2 * d_state
+    return {
+        # separate projections (z gate, x, [B;C], dt) so each output dim is
+        # cleanly tensor-shardable — a fused in_proj would put the z/x/B/C/dt
+        # split boundaries inside shards and force GSPMD gathers
+        "in_z": init_linear(ks[3], dim, d_inner, dtype=dtype),
+        "in_x": init_linear(ks[4], dim, d_inner, dtype=dtype),
+        "in_bc": init_linear(ks[5], dim, 2 * d_state, dtype=dtype),
+        "in_dt": init_linear(ks[0], dim, n_heads, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_dim), dtype=jnp.float32)
+                   * (1.0 / CONV_K ** 0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),  # A = -exp(a_log)
+        "dt_bias": jnp.zeros((n_heads,), dtype=jnp.float32),
+        "d_skip": jnp.ones((n_heads,), dtype=jnp.float32),
+        "norm": init_rmsnorm(d_inner, dtype=dtype),
+        "out_proj": init_linear(ks[2], d_inner, dim, dtype=dtype),
+    }
+
+
+def _split_proj(params, x, d_inner: int, d_state: int, n_heads: int):
+    z = linear(params["in_z"], x)
+    xs = linear(params["in_x"], x)
+    B, C = jnp.split(linear(params["in_bc"], x), 2, axis=-1)
+    dt = linear(params["in_dt"], x)
+    return z, xs, B, C, dt
+
+
+def _causal_conv(params, u, state=None):
+    """u [B, S, conv_dim] -> same shape; depthwise causal conv width CONV_K.
+    state [B, CONV_K-1, conv_dim] holds the trailing context for decode."""
+    w = params["conv_w"].astype(jnp.float32)
+    if state is None:
+        pad = jnp.zeros((u.shape[0], CONV_K - 1, u.shape[2]), dtype=u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1).astype(jnp.float32)        # [B, S+K-1, D]
+    out = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(CONV_K))
+    out = jax.nn.silu(out + params["conv_b"].astype(jnp.float32))
+    new_state = full[:, -(CONV_K - 1):].astype(u.dtype)
+    return out.astype(u.dtype), new_state
+
+
+def mamba2_scan(params, x, *, n_heads: int, d_state: int, expand: int = 2,
+                chunk: int = 256, return_state: bool = False):
+    """Full-sequence SSD. x [B, S, dim] -> y [B, S, dim]
+    (or (y, state) with state usable by mamba2_decode when return_state)."""
+    Bsz, S, dim = x.shape
+    d_inner = expand * dim
+    P = d_inner // n_heads
+    z, xs, Bmat, Cmat, dt = _split_proj(params, x, d_inner, d_state, n_heads)
+    conv_in = jnp.concatenate([xs, Bmat, Cmat], axis=-1)
+    conv_out, _ = _causal_conv(params, conv_in)
+    xs, Bmat, Cmat = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])     # [B, S, H]
+    a = -jnp.exp(params["a_log"])                                        # [H]
+    log_decay = dt * a                                                   # [B, S, H] (<=0)
+
+    xh = xs.reshape(Bsz, S, n_heads, P).astype(jnp.float32)
+    Bm = Bmat.astype(jnp.float32)                                        # [B, S, N]
+    Cm = Cmat.astype(jnp.float32)                                        # [B, S, N]
+
+    chunk = min(chunk, S)
+    nchunks = S // chunk
+    assert S % chunk == 0, f"seq {S} must be divisible by chunk {chunk}"
+
+    def reshape_c(t):
+        return t.reshape(Bsz, nchunks, chunk, *t.shape[2:])
+
+    xh_c, Bm_c, Cm_c, ld_c, dt_c = map(reshape_c, (xh, Bm, Cm, log_decay, dt))
+    # move chunk axis to front for scan: [nchunks, B, chunk, ...]
+    xh_c, Bm_c, Cm_c, ld_c, dt_c = (jnp.moveaxis(t, 1, 0) for t in (xh_c, Bm_c, Cm_c, ld_c, dt_c))
+
+    def chunk_step(H_prev, inp):
+        xh_k, B_k, C_k, ld_k, dt_k = inp         # [B, L, H, P], [B, L, N], ...
+        L = xh_k.shape[1]
+        cum = jnp.cumsum(ld_k, axis=1)           # [B, L, H] cumulative log decay
+        # intra-chunk: y_intra[t] = sum_{s<=t} exp(cum_t - cum_s) dt_s (C_t.B_s) x_s
+        decay_ts = cum[:, :, None, :] - cum[:, None, :, :]               # [B, t, s, H]
+        causal = jnp.tril(jnp.ones((L, L), dtype=bool))
+        # mask the EXPONENT (not the exp output): for non-causal s>t the
+        # exponent is large-positive -> exp overflows to inf, and
+        # where(mask, inf, 0) still back-props NaN through the dead branch.
+        safe_exp = jnp.where(causal[None, :, :, None], decay_ts, -jnp.inf)
+        g = jnp.exp(safe_exp)                                            # [B,t,s,H]
+        cb = jnp.einsum("btn,bsn->bts", C_k, B_k)                        # [B, t, s]
+        w = g * cb[..., None] * dt_k[:, None, :, :]                      # [B,t,s,H]
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xh_k)
+        # contribution of carried state: y_state[t] = exp(cum_t) C_t . H_prev
+        y_state = jnp.einsum("bthn,bhpn->bthp",
+                             jnp.exp(cum)[:, :, :, None] * C_k[:, :, None, :],
+                             H_prev)
+        # next state: H = exp(cum_L) H_prev + sum_s exp(cum_L - cum_s) dt_s x_s B_s^T
+        tail = jnp.exp(cum[:, -1:, :] - cum)                             # [B, L, H]
+        H_new = (jnp.exp(cum[:, -1])[:, :, None, None] * H_prev
+                 + jnp.einsum("blh,blhp,bln->bhpn", tail * dt_k, xh_k, B_k))
+        return H_new, y_intra + y_state
+
+    H0 = jnp.zeros((Bsz, n_heads, P, d_state), dtype=jnp.float32)
+    H_final, ys = jax.lax.scan(chunk_step, H0, (xh_c, Bm_c, Cm_c, ld_c, dt_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, n_heads, P)               # [B, S, H, P]
+    y = y + params["d_skip"][None, None, :, None] * xh
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    out = linear(params["out_proj"], y)
+    if return_state:
+        conv_tail = conv_in[:, -(CONV_K - 1):]                           # pre-conv inputs
+        return out, {"ssm": H_final, "conv": conv_tail}
+    return out
+
+
+def make_mamba_state(batch: int, dim: int, *, n_heads: int, d_state: int,
+                     expand: int = 2, dtype=jnp.float32):
+    d_inner = expand * dim
+    P = d_inner // n_heads
+    return {
+        "ssm": jnp.zeros((batch, n_heads, P, d_state), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, d_inner + 2 * d_state), dtype=dtype),
+    }
+
+
+def mamba2_decode(params, x, state, *, n_heads: int, d_state: int, expand: int = 2):
+    """One-token step. x [B, 1, dim] -> (y [B, 1, dim], new_state)."""
+    Bsz, S, dim = x.shape
+    assert S == 1
+    d_inner = expand * dim
+    P = d_inner // n_heads
+    z, xs, Bmat, Cmat, dt = _split_proj(params, x, d_inner, d_state, n_heads)
+    conv_in = jnp.concatenate([xs, Bmat, Cmat], axis=-1)
+    conv_out, conv_state = _causal_conv(params, conv_in, state["conv"])
+    xs, Bmat, Cmat = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # [B, H]
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a)                                                 # [B, H]
+    xh = xs[:, 0].reshape(Bsz, n_heads, P).astype(jnp.float32)
+    Bm = Bmat[:, 0].astype(jnp.float32)                                     # [B, N]
+    Cm = Cmat[:, 0].astype(jnp.float32)
+
+    H = state["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bm)
+    y = jnp.einsum("bhpn,bn->bhp", H, Cm) + params["d_skip"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    return linear(params["out_proj"], y), {"ssm": H, "conv": conv_state}

@@ -1,0 +1,30 @@
+"""Feed-forward blocks: SwiGLU (llama-style) and GELU (whisper/gpt-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import init_linear, linear
+
+
+def init_mlp(key, dim: int, hidden: int, *, kind: str = "swiglu", dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "wg": init_linear(ks[0], dim, hidden, dtype=dtype),
+            "wu": init_linear(ks[1], dim, hidden, dtype=dtype),
+            "wd": init_linear(ks[2], hidden, dim, dtype=dtype),
+        }
+    return {
+        "w1": init_linear(ks[0], dim, hidden, bias=True, dtype=dtype),
+        "w2": init_linear(ks[1], hidden, dim, bias=True, dtype=dtype),
+    }
+
+
+def mlp(params, x, *, kind: str = "swiglu"):
+    if kind == "swiglu":
+        g = linear(params["wg"], x)
+        u = linear(params["wu"], x)
+        return linear(params["wd"], jax.nn.silu(g) * u)
+    h = jax.nn.gelu(linear(params["w1"], x))
+    return linear(params["w2"], h)

@@ -1,0 +1,29 @@
+"""Normalisation layers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init_rmsnorm(dim: int, *, dtype=jnp.float32):
+    return {"g": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params, x, *, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * (1.0 / jnp.sqrt(var + eps))
+    return (y * params["g"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(dim: int, *, dtype=jnp.float32):
+    return {"g": jnp.ones((dim,), dtype=dtype), "b": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layernorm(params, x, *, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) / jnp.sqrt(var + eps)
+    return (y * params["g"].astype(jnp.float32) + params["b"].astype(jnp.float32)).astype(dt)

@@ -1,0 +1,41 @@
+"""Residual MLP blocks — the paper's feature-extraction module (§IV-C:
+"Raw data ... undergoes processing through a fully connected layer to reduce
+dimensionality ... refined through several residual blocks")."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import init_linear, linear
+from repro.nn.norms import init_layernorm, layernorm
+
+
+def init_resblock(key, dim: int, *, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln": init_layernorm(dim, dtype=dtype),
+        "fc1": init_linear(k1, dim, dim, bias=True, dtype=dtype),
+        "fc2": init_linear(k2, dim, dim, bias=True, dtype=dtype),
+    }
+
+
+def resblock(params, x):
+    h = layernorm(params["ln"], x)
+    h = jax.nn.relu(linear(params["fc1"], h))
+    h = linear(params["fc2"], h)
+    return x + h
+
+
+def init_res_mlp(key, in_dim: int, dim: int, n_blocks: int, *, dtype=jnp.float32):
+    ks = jax.random.split(key, n_blocks + 1)
+    return {
+        "proj": init_linear(ks[0], in_dim, dim, bias=True, dtype=dtype),
+        "blocks": [init_resblock(k, dim, dtype=dtype) for k in ks[1:]],
+    }
+
+
+def res_mlp(params, x):
+    h = jax.nn.relu(linear(params["proj"], x))
+    for bp in params["blocks"]:
+        h = resblock(bp, h)
+    return h

@@ -1,0 +1,23 @@
+"""Rotary position embeddings."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, *, theta: float = 10000.0):
+    """Inverse frequencies [head_dim//2], float32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x, positions, inv_freq):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] int32."""
+    dt = x.dtype
+    # angles [..., seq, head_dim//2]
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    cos = jnp.cos(ang)[..., None, :]   # [..., seq, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)

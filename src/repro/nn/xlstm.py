@@ -1,0 +1,306 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelisable) and
+sLSTM (scalar memory with recurrent gate connections, sequential scan).
+
+mLSTM parallel (training/prefill) uses the stabilised attention-like form:
+    F_t = cumsum log sigmoid(f̃);  D̃_ts = F_t - F_s + ĩ_s  (s <= t)
+    m_t = max_s D̃_ts;   W_ts = exp(D̃_ts - m_t) (q_t·k_s/√d)
+    y_t = Σ_s W_ts v_s / max(|Σ_s W_ts|, exp(-m_t))
+mLSTM decode carries per-head matrix memory C [P, P], normaliser n [P],
+stabiliser m (scalar).
+
+sLSTM is a strict recurrence (gates see R h_{t-1}) -> lax.scan over time for
+both train and decode, with exponential-gate stabilisation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import init_linear, linear
+from repro.nn.norms import init_rmsnorm, rmsnorm
+
+# ---------------------------------------------------------------- mLSTM ----
+
+
+def init_mlstm(key, dim: int, n_heads: int, *, expand: int = 2, dtype=jnp.float32):
+    d_inner = expand * dim
+    P = d_inner // n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": init_linear(ks[0], dim, 2 * d_inner, dtype=dtype),   # -> (x, gate)
+        "wq": init_linear(ks[1], d_inner, d_inner, dtype=dtype),
+        "wk": init_linear(ks[2], d_inner, d_inner, dtype=dtype),
+        "wv": init_linear(ks[3], d_inner, d_inner, dtype=dtype),
+        "wi": init_linear(ks[4], d_inner, n_heads, bias=True, dtype=dtype),
+        "wf": init_linear(ks[5], d_inner, n_heads, bias=True, dtype=dtype),
+        "norm": init_rmsnorm(d_inner, dtype=dtype),
+        "down": init_linear(ks[6], d_inner, dim, dtype=dtype),
+    }
+
+
+def _mlstm_qkvif(params, x, n_heads: int):
+    B, S, _ = x.shape
+    u = linear(params["up"], x)
+    xi, gate = jnp.split(u, 2, axis=-1)
+    d_inner = xi.shape[-1]
+    P = d_inner // n_heads
+    q = linear(params["wq"], xi).reshape(B, S, n_heads, P)
+    k = linear(params["wk"], xi).reshape(B, S, n_heads, P) / (P ** 0.5)
+    v = linear(params["wv"], xi).reshape(B, S, n_heads, P)
+    i_pre = linear(params["wi"], xi).astype(jnp.float32)               # [B, S, H]
+    f_pre = linear(params["wf"], xi).astype(jnp.float32)
+    return q, k, v, i_pre, f_pre, gate, d_inner, P
+
+
+def mlstm_parallel(params, x, *, n_heads: int, return_state: bool = False):
+    """x [B, S, dim] -> y [B, S, dim] (quadratic parallel form).
+    With return_state, also returns the recurrent (C, n, m) state after S
+    steps (equivalent to running mlstm_decode S times)."""
+    B, S, dim = x.shape
+    q, k, v, i_pre, f_pre, gate, d_inner, P = _mlstm_qkvif(params, x, n_heads)
+    logf = jax.nn.log_sigmoid(f_pre)                                   # [B, S, H]
+    F = jnp.cumsum(logf, axis=1)
+    dmat = F[:, :, None, :] - F[:, None, :, :] + i_pre[:, None, :, :]  # [B,t,s,H]
+    causal = jnp.tril(jnp.ones((S, S), dtype=bool))[None, :, :, None]
+    dmat = jnp.where(causal, dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)                           # [B,t,1,H]
+    w = jnp.exp(dmat - m)                                              # [B,t,s,H]
+    qk = jnp.einsum("bthp,bshp->btsh", q.astype(jnp.float32), k.astype(jnp.float32))
+    cmat = w * qk
+    num = jnp.einsum("btsh,bshp->bthp", cmat, v.astype(jnp.float32))
+    denom = jnp.maximum(jnp.abs(jnp.sum(cmat, axis=2)), jnp.exp(-m[:, :, 0, :]))
+    y = (num / denom[..., None]).reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(gate)
+    out = linear(params["down"], y)
+    if return_state:
+        # state after step S: decay of entry s is F_S - F_s + i_s
+        d_end = F[:, -1:, :] - F + i_pre                               # [B, S, H]
+        m_T = jnp.max(d_end, axis=1)                                   # [B, H]
+        w = jnp.exp(d_end - m_T[:, None, :])                           # [B, S, H]
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        C = jnp.einsum("bsh,bshp,bshq->bhpq", w, kf, vf)
+        n = jnp.einsum("bsh,bshp->bhp", w, kf)
+        return out, {"C": C, "n": n, "m": m_T}
+    return out
+
+
+def mlstm_chunkwise(params, x, *, n_heads: int, chunk: int = 256,
+                    return_state: bool = False):
+    """Chunkwise-parallel mLSTM: quadratic only within a chunk, a lax.scan
+    carries the (C, n, m) recurrent state across chunks. Matches
+    mlstm_parallel (same stabilised math) while materialising
+    O(S·chunk·H) instead of O(S²·H) — the S=4k train shape drops from a
+    [B,4096,4096,H] decay tensor per layer to [B,256,256,H] per scan step.
+    """
+    B, S, dim = x.shape
+    if S <= chunk:
+        return mlstm_parallel(params, x, n_heads=n_heads,
+                              return_state=return_state)
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    q, k, v, i_pre, f_pre, gate, d_inner, P = _mlstm_qkvif(params, x, n_heads)
+    nc, L = S // chunk, chunk
+    H = n_heads
+
+    def rc(t):                                   # [B,S,...] -> [nc,B,L,...]
+        return jnp.moveaxis(t.reshape(B, nc, L, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc = map(rc, (q.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32)))
+    ic, fc = rc(i_pre), rc(jax.nn.log_sigmoid(f_pre))
+
+    def chunk_step(carry, inp):
+        C_p, n_p, m_p = carry                    # [B,H,P,P], [B,H,P], [B,H]
+        q_k, k_k, v_k, i_k, lf_k = inp           # [B,L,H,P] / [B,L,H]
+        F = jnp.cumsum(lf_k, axis=1)             # [B,L,H] local decay prefix
+        # intra-chunk decay D[t,s] = F_t - F_s + i_s  (s <= t)
+        dloc = F[:, :, None, :] - F[:, None, :, :] + i_k[:, None, :, :]
+        causal = jnp.tril(jnp.ones((L, L), dtype=bool))[None, :, :, None]
+        dloc = jnp.where(causal, dloc, -jnp.inf)
+        # carried-state decay at local t: m_p + F_t
+        dst = m_p[:, None, :] + F                # [B,L,H]
+        m_t = jnp.maximum(jnp.max(dloc, axis=2), dst)      # [B,L,H]
+        w_loc = jnp.exp(dloc - m_t[:, :, None, :])          # [B,t,s,H]
+        w_st = jnp.exp(dst - m_t)                           # [B,L,H]
+        qk = jnp.einsum("bthp,bshp->btsh", q_k, k_k)
+        cmat = w_loc * qk
+        num = (jnp.einsum("btsh,bshp->bthp", cmat, v_k)
+               + w_st[..., None] * jnp.einsum("bhpq,bthp->bthq", C_p, q_k))
+        den = (jnp.sum(cmat, axis=2)
+               + w_st * jnp.einsum("bhp,bthp->bth", n_p, q_k))
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        y_k = num / den[..., None]                          # [B,L,H,P]
+        # state at chunk end: decay of local entry s is F_L - F_s + i_s
+        d_end = F[:, -1:, :] - F + i_k                      # [B,L,H]
+        m_end = jnp.maximum(m_p + F[:, -1], jnp.max(d_end, axis=1))  # [B,H]
+        w_end = jnp.exp(d_end - m_end[:, None, :])          # [B,L,H]
+        f_carry = jnp.exp(m_p + F[:, -1] - m_end)           # [B,H]
+        C_n = (f_carry[..., None, None] * C_p
+               + jnp.einsum("bsh,bshp,bshq->bhpq", w_end, k_k, v_k))
+        n_n = f_carry[..., None] * n_p + jnp.einsum("bsh,bshp->bhp", w_end, k_k)
+        return (C_n, n_n, m_end), y_k
+
+    st0 = (jnp.zeros((B, H, P, P), jnp.float32),
+           jnp.zeros((B, H, P), jnp.float32),
+           jnp.full((B, H), -jnp.inf, jnp.float32))
+    (C_f, n_f, m_f), ys = jax.lax.scan(
+        chunk_step, st0, (qc, kc, vc, ic, fc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(gate)
+    out = linear(params["down"], y)
+    if return_state:
+        return out, {"C": C_f, "n": n_f, "m": m_f}
+    return out
+
+
+def make_mlstm_state(batch: int, dim: int, n_heads: int, *, expand: int = 2,
+                     dtype=jnp.float32):
+    d_inner = expand * dim
+    P = d_inner // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, P, P), dtype=jnp.float32),
+        "n": jnp.zeros((batch, n_heads, P), dtype=jnp.float32),
+        "m": jnp.full((batch, n_heads), -jnp.inf, dtype=jnp.float32),
+    }
+
+
+def mlstm_decode(params, x, state, *, n_heads: int):
+    """One-token recurrent step. x [B, 1, dim]."""
+    B, S, dim = x.shape
+    assert S == 1
+    q, k, v, i_pre, f_pre, gate, d_inner, P = _mlstm_qkvif(params, x, n_heads)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                                 # [B, H, P]
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]                             # [B, H]
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    f_sc = jnp.exp(logf + state["m"] - m_new)
+    i_sc = jnp.exp(i_pre - m_new)
+    C = state["C"] * f_sc[..., None, None] + i_sc[..., None, None] * (
+        k[..., :, None] * v[..., None, :])                              # [B,H,P,P]
+    n = state["n"] * f_sc[..., None] + i_sc[..., None] * k
+    num = jnp.einsum("bhpq,bhp->bhq", C, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.sum(n * q.astype(jnp.float32), axis=-1)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(gate)
+    return linear(params["down"], y), {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------- sLSTM ----
+
+
+def init_slstm(key, dim: int, n_heads: int, *, ff_factor: float = 4 / 3,
+               dtype=jnp.float32):
+    P = dim // n_heads
+    ks = jax.random.split(key, 8)
+    hid = int(ff_factor * dim)
+
+    def gate_block(k):
+        kw, kr = jax.random.split(k)
+        return {
+            "w": init_linear(kw, dim, dim, bias=True, dtype=dtype),
+            # block-diagonal recurrence: per-head [P, P]
+            "r": (jax.random.normal(kr, (n_heads, P, P), dtype=jnp.float32)
+                  * (1.0 / P ** 0.5)).astype(dtype),
+        }
+
+    return {
+        "z": gate_block(ks[0]), "i": gate_block(ks[1]),
+        "f": gate_block(ks[2]), "o": gate_block(ks[3]),
+        "norm": init_rmsnorm(dim, dtype=dtype),
+        "ff_up": init_linear(ks[4], dim, hid, dtype=dtype),
+        "ff_dn": init_linear(ks[5], hid, dim, dtype=dtype),
+    }
+
+
+def _slstm_gate(gp, wx_t, h_prev, n_heads: int):
+    """wx_t [B, dim] (precomputed W·x), h_prev [B, H, P] -> pre-act [B, dim].
+
+    The input projection is hoisted OUT of the time scan (one batched matmul
+    over all S positions); only the block-diagonal recurrence R·h runs per
+    step — the dense W would otherwise be re-read from HBM every timestep.
+    """
+    B = wx_t.shape[0]
+    rec = jnp.einsum("bhp,hpq->bhq", h_prev.astype(jnp.float32),
+                     gp["r"].astype(jnp.float32)).reshape(B, -1)
+    return wx_t.astype(jnp.float32) + rec
+
+
+def make_slstm_state(batch: int, dim: int, n_heads: int, *, dtype=jnp.float32):
+    P = dim // n_heads
+    sh = (batch, n_heads, P)
+    # distinct buffers per leaf (decode donates the state)
+    return {"c": jnp.zeros(sh, jnp.float32),
+            "n": jnp.full(sh, 1e-6, jnp.float32),
+            "h": jnp.zeros(sh, jnp.float32),
+            "m": jnp.zeros(sh, jnp.float32)}
+
+
+def _slstm_step(params, state, wx_t, n_heads: int):
+    """wx_t: dict gate -> [B, dim] precomputed input projections."""
+    B, dim = wx_t["z"].shape
+    P = dim // n_heads
+    h_prev = state["h"]
+    zt = jnp.tanh(_slstm_gate(params["z"], wx_t["z"], h_prev, n_heads)).reshape(B, n_heads, P)
+    it = _slstm_gate(params["i"], wx_t["i"], h_prev, n_heads).reshape(B, n_heads, P)
+    ft = _slstm_gate(params["f"], wx_t["f"], h_prev, n_heads).reshape(B, n_heads, P)
+    ot = jax.nn.sigmoid(_slstm_gate(params["o"], wx_t["o"], h_prev, n_heads)).reshape(B, n_heads, P)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + state["m"], it)
+    i_sc = jnp.exp(it - m_new)
+    f_sc = jnp.exp(logf + state["m"] - m_new)
+    c = f_sc * state["c"] + i_sc * zt
+    n = jnp.maximum(f_sc * state["n"] + i_sc, 1e-6)
+    h = ot * (c / n)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_scan(params, x, *, n_heads: int, return_state: bool = False,
+               chunk: int = 64, unroll: int = 8):
+    """x [B, S, dim] -> y [B, S, dim] (sequential over S; input projections
+    batched outside the scan, inner loop unrolled so the per-step
+    block-diagonal einsums pipeline).
+
+    Two-level scan: the outer scan stores one state per ``chunk`` while the
+    rematerialised inner scan replays its chunk during the backward pass —
+    trajectory storage drops S/chunk-fold vs a flat scan."""
+    B, S, dim = x.shape
+    # all four input projections for every position in one pass
+    wx = {g: jnp.moveaxis(linear(params[g]["w"], x), 1, 0)   # [S, B, dim]
+          for g in ("z", "i", "f", "o")}
+
+    def step(state, wx_t):
+        new = _slstm_step(params, state, wx_t, n_heads)
+        return new, new["h"]
+
+    state0 = make_slstm_state(B, dim, n_heads)
+    if S > chunk and S % chunk == 0:
+        wx_c = jax.tree.map(
+            lambda t: t.reshape(S // chunk, chunk, *t.shape[1:]), wx)
+
+        @jax.checkpoint
+        def chunk_step(state, wx_k):
+            return jax.lax.scan(step, state, wx_k, unroll=unroll)
+
+        final, hs = jax.lax.scan(chunk_step, state0, wx_c)
+        hs = hs.reshape(S, *hs.shape[2:])
+    else:
+        final, hs = jax.lax.scan(step, state0, wx, unroll=unroll)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, dim).astype(x.dtype)
+    h = rmsnorm(params["norm"], h)
+    out = linear(params["ff_dn"], jax.nn.gelu(linear(params["ff_up"], h)))
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_decode(params, x, state, *, n_heads: int):
+    """One-token step. x [B, 1, dim]."""
+    B, S, dim = x.shape
+    assert S == 1
+    wx_t = {g: linear(params[g]["w"], x[:, 0]) for g in ("z", "i", "f", "o")}
+    new = _slstm_step(params, state, wx_t, n_heads)
+    h = new["h"].reshape(B, 1, dim).astype(x.dtype)
+    h = rmsnorm(params["norm"], h)
+    y = linear(params["ff_dn"], jax.nn.gelu(linear(params["ff_up"], h)))
+    return y, new

@@ -1,0 +1,2 @@
+from repro.serving.batcher import Batcher, Request
+from repro.serving.engine import StageServer, PipelineServer

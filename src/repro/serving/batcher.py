@@ -1,0 +1,44 @@
+"""Request batching: each pipeline stage has a centralized queue (paper
+§III-A) and a batcher that groups pending requests up to the configured
+batch size, padding the tail batch."""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                 # [S] int32 prompt for the first stage
+    arrival: float = 0.0
+    result: np.ndarray | None = None
+    stage_outputs: list = field(default_factory=list)
+
+
+class Batcher:
+    def __init__(self, batch_size: int, seq_len: int):
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.queue: deque[Request] = deque()
+
+    def put(self, req: Request):
+        self.queue.append(req)
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def next_batch(self) -> tuple[list[Request], np.ndarray] | None:
+        """Pop up to batch_size requests -> (requests, tokens [B, S]).
+        The tail batch is padded by repeating the last request's tokens."""
+        if not self.queue:
+            return None
+        reqs = [self.queue.popleft()
+                for _ in range(min(self.batch_size, len(self.queue)))]
+        toks = np.zeros((self.batch_size, self.seq_len), dtype=np.int32)
+        for i in range(self.batch_size):
+            src = reqs[min(i, len(reqs) - 1)].tokens[:self.seq_len]
+            toks[i, :len(src)] = src
+        return reqs, toks

@@ -1,0 +1,127 @@
+"""Pipeline serving engine: real JAX models behind each stage.
+
+StageServer = one task's deployment: a model variant (ArchConfig), a batch
+size, and a replica count (replicas are data-parallel splits of a batch; on
+the CPU dev box they execute sequentially but the abstraction mirrors the
+mesh "data"-axis replica groups of the production launch).
+
+PipelineServer chains stages (the paper's gRPC hops) and implements
+``apply_config`` — the Kubernetes-API reconfiguration the OPD agent calls:
+switching a stage's variant swaps model params (a re-shard/cold-start in
+production, charged by the simulator).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mdp import Config
+from repro.models import api
+from repro.models.config import ArchConfig
+from repro.serving.batcher import Batcher, Request
+
+
+class StageServer:
+    def __init__(self, name: str, variants: list[ArchConfig], *,
+                 seq_len: int = 32, batch_size: int = 4, replicas: int = 1,
+                 seed: int = 0):
+        self.name = name
+        self.variants = variants
+        self.seq_len = seq_len
+        self.params = [api.init_model(jax.random.PRNGKey(seed + i), cfg)
+                       for i, cfg in enumerate(variants)]
+        self.z = 0
+        self.replicas = replicas
+        self.batcher = Batcher(batch_size, seq_len)
+        self._fwd_cache: dict[int, callable] = {}
+        self.served = 0
+
+    @property
+    def cfg(self) -> ArchConfig:
+        return self.variants[self.z]
+
+    def _fwd(self, z: int):
+        if z not in self._fwd_cache:
+            cfg = self.variants[z]
+
+            @jax.jit
+            def fwd(params, batch):
+                logits, _ = api.forward(params, batch, cfg)
+                return jnp.argmax(logits, axis=-1)
+
+            self._fwd_cache[z] = fwd
+        return self._fwd_cache[z]
+
+    def configure(self, *, z: int | None = None, batch_size: int | None = None,
+                  replicas: int | None = None):
+        if z is not None:
+            self.z = int(z) % len(self.variants)
+        if batch_size is not None:
+            self.batcher.batch_size = int(batch_size)
+        if replicas is not None:
+            self.replicas = int(replicas)
+
+    def _make_batch(self, tokens: np.ndarray) -> dict:
+        cfg = self.cfg
+        batch = {"tokens": jnp.asarray(tokens % cfg.vocab)}
+        B = tokens.shape[0]
+        if cfg.family == "vlm":
+            key = jax.random.PRNGKey(0)
+            batch["vision_embeds"] = jax.random.normal(
+                key, (B, cfg.n_patches, cfg.d_model), jnp.float32) * 0.02
+        if cfg.family == "audio":
+            key = jax.random.PRNGKey(1)
+            batch["enc_states"] = jax.random.normal(
+                key, (B, cfg.enc_len, cfg.d_model), jnp.float32) * 0.02
+        return batch
+
+    def serve_pending(self) -> list[Request]:
+        """Drain the queue; returns completed requests with stage output."""
+        done = []
+        fwd = self._fwd(self.z)
+        while True:
+            nb = self.batcher.next_batch()
+            if nb is None:
+                return done
+            reqs, toks = nb
+            # replicas split the batch (data parallel); sequential on CPU
+            out = np.asarray(fwd(self.params[self.z], self._make_batch(toks)))
+            for i, req in enumerate(reqs):
+                req.stage_outputs.append(out[i])
+                req.result = out[i]
+                done.append(req)
+            self.served += len(reqs)
+
+
+class PipelineServer:
+    def __init__(self, stages: list[StageServer]):
+        self.stages = stages
+        self.completed: list[Request] = []
+        self.switch_count = 0
+
+    def apply_config(self, cfg: Config, batch_choices: list[int] | None = None):
+        """The OPD action -> live reconfiguration (paper: K8s Python API)."""
+        for n, stage in enumerate(self.stages):
+            if stage.z != cfg.z[n] % len(stage.variants):
+                self.switch_count += 1
+            stage.configure(z=cfg.z[n], batch_size=cfg.b[n], replicas=cfg.f[n])
+
+    def submit(self, req: Request):
+        self.stages[0].batcher.put(req)
+
+    def process(self) -> list[Request]:
+        """Push every queued request through all stages (gRPC chain)."""
+        for i, stage in enumerate(self.stages):
+            finished = stage.serve_pending()
+            if i + 1 < len(self.stages):
+                for req in finished:
+                    # next stage consumes this stage's output tokens
+                    req.tokens = np.asarray(req.result, dtype=np.int32)
+                    self.stages[i + 1].batcher.put(req)
+            else:
+                self.completed.extend(finished)
+        return self.completed

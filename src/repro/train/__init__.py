@@ -1,0 +1,2 @@
+from repro.train.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.train.loss import lm_loss, chunked_lm_head_loss

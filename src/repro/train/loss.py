@@ -1,0 +1,63 @@
+"""Cross-entropy LM loss with label masking and MoE aux-loss folding.
+
+``chunked_lm_head_loss`` fuses the lm_head projection into the loss, one
+sequence-chunk at a time under remat: the full [B, S, V] logits tensor
+(13-33 GB/device at S=4k for 50k-128k vocabs) never materialises — peak is
+one [B, chunk, V] block, recomputed during backward.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import linear
+
+
+def lm_loss(logits, labels, *, mask=None, lb_loss=None, lb_coeff: float = 0.01):
+    """logits [B, S, V]; labels [B, S] (-100 = ignore); returns (loss, metrics)."""
+    V = logits.shape[-1]
+    valid = labels >= 0
+    if mask is not None:
+        valid = valid & mask
+    safe_labels = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe_labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(jnp.where(valid, nll, 0.0)) / denom
+    total = loss
+    if lb_loss is not None:
+        total = total + lb_coeff * lb_loss
+    return total, {"ce_loss": loss, "n_tokens": denom}
+
+
+def chunked_lm_head_loss(head, h, labels, *, lb_loss=None, lb_coeff: float = 0.01,
+                         chunk: int = 512):
+    """h [B, S, d] (post-final-norm), head = lm_head linear params,
+    labels [B, S] (-100 = ignore) -> (loss, metrics). Sequence-chunked +
+    remat so at most one [B, chunk, V] logits block is ever live."""
+    B, S, d = h.shape
+    if S <= chunk or S % chunk:
+        return lm_loss(linear(head, h), labels, lb_loss=lb_loss,
+                       lb_coeff=lb_coeff)
+    nc = S // chunk
+    h_c = jnp.moveaxis(h.reshape(B, nc, chunk, d), 1, 0)
+    y_c = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        h_k, y_k = inp
+        logits = linear(head, h_k)
+        valid = y_k >= 0
+        safe = jnp.where(valid, y_k, 0)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        return (acc[0] + jnp.sum(jnp.where(valid, nll, 0.0)),
+                acc[1] + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (h_c, y_c))
+    denom = jnp.maximum(cnt, 1)
+    loss = tot / denom
+    total = loss if lb_loss is None else loss + lb_coeff * lb_loss
+    return total, {"ce_loss": loss, "n_tokens": denom}

@@ -1,0 +1,134 @@
+"""Property-based tests (hypothesis) on the paper's MDP invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import default_pipeline, make_trace, PipelineEnv
+from repro.core.mdp import (Config, QoSWeights, evaluate, feasible,
+                            pipeline_metrics, resource_usage, reward, qos)
+
+PIPE = default_pipeline()
+W = QoSWeights()
+
+
+def cfg_strategy():
+    n = PIPE.n_tasks
+    return st.tuples(
+        st.tuples(*[st.integers(0, len(t.variants) - 1) for t in PIPE.tasks]),
+        st.tuples(*[st.integers(1, PIPE.f_max) for _ in range(n)]),
+        st.tuples(*[st.sampled_from(PIPE.batch_choices()) for _ in range(n)]),
+    ).map(lambda zfb: Config(z=zfb[0], f=zfb[1], b=zfb[2]))
+
+
+class TestMetrics:
+    @given(cfg_strategy(), st.floats(1.0, 500.0))
+    @settings(max_examples=200, deadline=None)
+    def test_measured_throughput_bounded_by_demand(self, cfg, demand):
+        V, C, T, L, E, cap = pipeline_metrics(PIPE, cfg, demand)
+        assert T <= demand + 1e-9
+        assert T <= cap + 1e-9
+        assert abs(E - (demand - cap)) < 1e-6
+
+    @given(cfg_strategy(), st.floats(1.0, 500.0))
+    @settings(max_examples=200, deadline=None)
+    def test_cost_accuracy_latency_positive(self, cfg, demand):
+        V, C, T, L, E, cap = pipeline_metrics(PIPE, cfg, demand)
+        assert C > 0 and V > 0 and L > 0
+
+    @given(cfg_strategy(), st.floats(1.0, 500.0))
+    @settings(max_examples=200, deadline=None)
+    def test_reward_eq7_consistency(self, cfg, demand):
+        """Eq.(7): r = Q - beta_c*C - gamma_b*max(b)."""
+        m = evaluate(PIPE, cfg, demand, W)
+        assert abs(m["reward"] - (m["qos"] - W.beta_c * m["C"]
+                                  - W.gamma_b * max(cfg.b))) < 1e-9
+        assert abs(reward(PIPE, cfg, demand, W) - m["reward"]) < 1e-9
+        assert abs(qos(PIPE, cfg, demand, W) - m["qos"]) < 1e-9
+
+    @given(cfg_strategy())
+    @settings(max_examples=100, deadline=None)
+    def test_more_replicas_never_reduce_capacity(self, cfg):
+        m1 = evaluate(PIPE, cfg, 100.0, W)
+        bigger = Config(z=cfg.z, f=tuple(min(f + 1, PIPE.f_max) for f in cfg.f),
+                        b=cfg.b)
+        m2 = evaluate(PIPE, bigger, 100.0, W)
+        assert m2["capacity"] >= m1["capacity"] - 1e-9
+
+    @given(cfg_strategy(), st.floats(1.0, 400.0))
+    @settings(max_examples=100, deadline=None)
+    def test_cold_start_only_hurts(self, cfg, demand):
+        m0 = evaluate(PIPE, cfg, demand, W, cold_frac=0.0)
+        m1 = evaluate(PIPE, cfg, demand, W, cold_frac=0.3)
+        assert m1["capacity"] <= m0["capacity"] + 1e-9
+        assert m1["T"] <= m0["T"] + 1e-9
+
+    @given(cfg_strategy())
+    @settings(max_examples=100, deadline=None)
+    def test_resource_usage_additive(self, cfg):
+        total = resource_usage(PIPE, cfg)
+        parts = sum(PIPE.tasks[n].variants[cfg.z[n]].resource * cfg.f[n]
+                    for n in range(PIPE.n_tasks))
+        assert abs(total - parts) < 1e-9
+        assert feasible(PIPE, cfg) == (total <= PIPE.w_max)
+
+
+class TestEnv:
+    def test_deterministic_given_seed(self):
+        tr = make_trace("fluctuating", seed=3)
+        outs = []
+        for _ in range(2):
+            env = PipelineEnv(PIPE, tr, seed=3)
+            env.reset()
+            cfg = env.default_config()
+            rs = [env.step(cfg)[1] for _ in range(5)]
+            outs.append(rs)
+        assert outs[0] == outs[1]
+
+    def test_episode_length(self):
+        env = PipelineEnv(PIPE, make_trace("steady_low", seed=0))
+        env.reset()
+        steps = 0
+        done = False
+        while not done:
+            _, _, done, _ = env.step(env.default_config())
+            steps += 1
+        assert steps == 120          # 1200 s cycle / 10 s adaptation interval
+
+    def test_switch_penalty_reduces_reward(self):
+        tr = make_trace("steady_low", seed=0)
+        env1 = PipelineEnv(PIPE, tr)
+        env1.reset()
+        stay = env1.default_config()
+        env1.step(stay)
+        _, r_stay, _, _ = env1.step(stay)
+        env2 = PipelineEnv(PIPE, tr)
+        env2.reset()
+        env2.step(stay)
+        switched = Config(z=(1,) + stay.z[1:], f=stay.f, b=stay.b)
+        _, r_switch, _, i2 = env2.step(switched)
+        # same interval, switch pays a cold-start capacity penalty
+        assert i2["capacity"] < env1.monitor.latest("throughput") + 1e9
+        assert r_switch != r_stay
+
+    def test_state_dim_matches_eq5(self):
+        env = PipelineEnv(PIPE, make_trace("steady_low", seed=0))
+        s = env.reset()
+        assert s.shape == (PIPE.n_tasks * 9,)   # 9 features per task (Eq. 5)
+
+
+class TestWorkloads:
+    @pytest.mark.parametrize("kind", ["steady_low", "fluctuating", "steady_high"])
+    def test_traces_positive_and_seeded(self, kind):
+        a = make_trace(kind, seed=5)
+        b = make_trace(kind, seed=5)
+        c = make_trace(kind, seed=6)
+        assert (a > 0).all() and len(a) == 1200
+        assert np.array_equal(a, b)
+        assert not np.array_equal(a, c)
+
+    def test_regime_ordering(self):
+        lo = make_trace("steady_low", seed=0).mean()
+        hi = make_trace("steady_high", seed=0).mean()
+        fl = make_trace("fluctuating", seed=0)
+        assert lo < hi
+        assert fl.std() > make_trace("steady_low", seed=0).std()

@@ -1,0 +1,217 @@
+"""Unit tests: nn modules — including the parallel-vs-recurrent equivalences
+that guarantee prefill and decode paths compute the same function."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import nn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def seq_decode(step_fn, x, state):
+    outs = []
+    for t in range(x.shape[1]):
+        o, state = step_fn(x[:, t:t + 1], state)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1), state
+
+
+class TestAttention:
+    def test_prefill_decode_equivalence(self):
+        p = nn.init_attention(KEY, 64, 8, 2, 16)
+        x = jax.random.normal(KEY, (2, 16, 64))
+        y, _ = nn.attention_prefill(p, x, n_heads=8, n_kv=2, head_dim=16)
+        cache = nn.make_kv_cache(2, 16, 2, 16)
+        dec, _ = seq_decode(
+            lambda xt, c: nn.attention_decode(p, xt, c, n_heads=8, n_kv=2,
+                                              head_dim=16), x, cache)
+        assert jnp.abs(dec - y).max() < 1e-5
+
+    def test_sliding_window_masks_past(self):
+        p = nn.init_attention(KEY, 32, 4, 4, 8)
+        x = jax.random.normal(KEY, (1, 32, 32))
+        full, _ = nn.attention_prefill(p, x, n_heads=4, n_kv=4, head_dim=8)
+        win, _ = nn.attention_prefill(p, x, n_heads=4, n_kv=4, head_dim=8,
+                                      window=4)
+        # early positions agree (window >= history), late positions differ
+        assert jnp.abs(full[:, :4] - win[:, :4]).max() < 1e-5
+        assert jnp.abs(full[:, -1] - win[:, -1]).max() > 1e-4
+
+    def test_ring_cache_decode(self):
+        p = nn.init_attention(KEY, 32, 4, 4, 8)
+        cache = nn.make_kv_cache(1, 4, 4, 8)   # window of 4
+        x = jax.random.normal(KEY, (1, 10, 32))
+        for t in range(10):
+            y, cache = nn.attention_decode(p, x[:, t:t + 1], cache,
+                                           n_heads=4, n_kv=4, head_dim=8,
+                                           ring=True)
+            assert not jnp.isnan(y).any()
+        assert int(cache["pos"][0]) == 10
+
+
+class TestMamba2:
+    def test_scan_decode_equivalence(self):
+        p = nn.init_mamba2(KEY, 64, n_heads=4, d_state=16)
+        x = jax.random.normal(KEY, (2, 16, 64))
+        y, final = nn.mamba2_scan(p, x, n_heads=4, d_state=16, chunk=8,
+                                  return_state=True)
+        st = nn.make_mamba_state(2, 64, n_heads=4, d_state=16)
+        dec, st = seq_decode(
+            lambda xt, s: nn.mamba2_decode(p, xt, s, n_heads=4, d_state=16),
+            x, st)
+        assert jnp.abs(dec - y).max() < 1e-4
+        assert jnp.abs(st["ssm"] - final["ssm"]).max() < 1e-4
+
+    def test_chunk_invariance(self):
+        p = nn.init_mamba2(KEY, 32, n_heads=2, d_state=8)
+        x = jax.random.normal(KEY, (1, 32, 32))
+        y8 = nn.mamba2_scan(p, x, n_heads=2, d_state=8, chunk=8)
+        y16 = nn.mamba2_scan(p, x, n_heads=2, d_state=8, chunk=16)
+        assert jnp.abs(y8 - y16).max() < 1e-4
+
+
+class TestXLSTM:
+    def test_mlstm_parallel_recurrent_equivalence(self):
+        p = nn.init_mlstm(KEY, 64, 4)
+        x = jax.random.normal(KEY, (2, 16, 64))
+        y, fstate = nn.mlstm_parallel(p, x, n_heads=4, return_state=True)
+        st = nn.make_mlstm_state(2, 64, 4)
+        dec, st = seq_decode(
+            lambda xt, s: nn.mlstm_decode(p, xt, s, n_heads=4), x, st)
+        assert jnp.abs(dec - y).max() < 1e-4
+        assert jnp.abs(st["C"] - fstate["C"]).max() < 1e-4
+
+    def test_slstm_scan_decode_equivalence(self):
+        p = nn.init_slstm(KEY, 64, 4)
+        x = jax.random.normal(KEY, (2, 16, 64))
+        y = nn.slstm_scan(p, x, n_heads=4)
+        st = nn.make_slstm_state(2, 64, 4)
+        dec, _ = seq_decode(
+            lambda xt, s: nn.slstm_decode(p, xt, s, n_heads=4), x, st)
+        assert jnp.abs(dec - y).max() < 1e-5
+
+
+class TestMoE:
+    def test_output_shape_and_balance(self):
+        p = nn.init_moe(KEY, 64, 128, 8)
+        x = jax.random.normal(KEY, (2, 32, 64))
+        y, aux = nn.moe(p, x, top_k=2)
+        assert y.shape == x.shape
+        assert not jnp.isnan(y).any()
+        assert aux["lb_loss"] >= 1.0 - 1e-5    # >= 1 by Cauchy-Schwarz
+        assert 0.0 <= aux["dropped_frac"] <= 1.0
+
+    def test_single_expert_equals_mlp(self):
+        """top_k = n_experts = 1 must reduce to a plain swiglu MLP."""
+        p = nn.init_moe(KEY, 32, 64, 1)
+        x = jax.random.normal(KEY, (1, 8, 32))
+        y, aux = nn.moe(p, x, top_k=1, capacity_factor=8.0)
+        mp = {"wg": {"w": p["experts"]["wg"][0]},
+              "wu": {"w": p["experts"]["wu"][0]},
+              "wd": {"w": p["experts"]["wd"][0]}}
+        y2 = nn.mlp(mp, x, kind="swiglu")
+        assert jnp.abs(y - y2).max() < 1e-5
+
+
+class TestBasics:
+    def test_rmsnorm_scale_invariant_direction(self):
+        p = nn.init_rmsnorm(16)
+        x = jax.random.normal(KEY, (4, 16))
+        y1 = nn.rmsnorm(p, x)
+        y2 = nn.rmsnorm(p, x * 10.0)
+        assert jnp.abs(y1 - y2).max() < 1e-4
+
+    def test_rope_preserves_norm(self):
+        inv = nn.rope_frequencies(32)
+        x = jax.random.normal(KEY, (1, 8, 2, 32))
+        pos = jnp.arange(8, dtype=jnp.int32)[None]
+        y = nn.apply_rope(x, pos, inv)
+        assert jnp.abs(jnp.linalg.norm(y, axis=-1)
+                       - jnp.linalg.norm(x, axis=-1)).max() < 1e-4
+
+    def test_lstm_shapes(self):
+        p = nn.init_lstm(KEY, 3, 25)
+        h, (hT, cT) = nn.lstm_scan(p, jax.random.normal(KEY, (2, 10, 3)))
+        assert h.shape == (2, 10, 25)
+        assert hT.shape == (2, 25)
+
+
+class TestXLSTMChunkwise:
+    def test_chunkwise_matches_parallel(self):
+        """Chunkwise mLSTM (the S=4k train form) must equal the quadratic
+        parallel oracle, including the carried (C, n, m) state."""
+        p = nn.init_mlstm(KEY, 64, 4)
+        x = jax.random.normal(jax.random.PRNGKey(7), (2, 64, 64)) * 0.5
+        y_ref, st_ref = nn.mlstm_parallel(p, x, n_heads=4, return_state=True)
+        y_chk, st_chk = nn.mlstm_chunkwise(p, x, n_heads=4, chunk=16,
+                                           return_state=True)
+        assert jnp.abs(y_ref - y_chk).max() < 5e-4
+        for k in ("C", "n", "m"):
+            assert jnp.abs(st_ref[k] - st_chk[k]).max() < 5e-4
+
+    def test_chunkwise_chunk_invariance(self):
+        p = nn.init_mlstm(KEY, 64, 4)
+        x = jax.random.normal(jax.random.PRNGKey(8), (1, 48, 64)) * 0.5
+        y1 = nn.mlstm_chunkwise(p, x, n_heads=4, chunk=8)
+        y2 = nn.mlstm_chunkwise(p, x, n_heads=4, chunk=24)
+        assert jnp.abs(y1 - y2).max() < 5e-4
+
+    def test_chunkwise_grads_finite(self):
+        p = nn.init_mlstm(KEY, 32, 4)
+        x = jax.random.normal(jax.random.PRNGKey(9), (1, 32, 32))
+        g = jax.grad(lambda p_: nn.mlstm_chunkwise(p_, x, n_heads=4,
+                                                   chunk=8).sum())(p)
+        assert all(jnp.isfinite(v).all() for v in jax.tree.leaves(g))
+
+    def test_slstm_two_level_scan_matches_flat(self):
+        p = nn.init_slstm(KEY, 64, 4)
+        x = jax.random.normal(jax.random.PRNGKey(10), (2, 32, 64)) * 0.5
+        y_two = nn.slstm_scan(p, x, n_heads=4, chunk=8)     # two-level path
+        y_flat = nn.slstm_scan(p, x, n_heads=4, chunk=64)   # flat path
+        assert jnp.abs(y_two - y_flat).max() < 1e-5
+
+
+class TestMoEPadding:
+    def test_padded_experts_never_routed(self):
+        """E=40-style configs are physically padded to a multiple of 16;
+        padded experts must receive zero routed tokens."""
+        p = nn.init_moe(KEY, 32, 64, 40)
+        assert p["experts"]["wg"].shape[0] == 48
+        x = jax.random.normal(KEY, (2, 16, 32))
+        y, aux = nn.moe(p, x, top_k=4)
+        assert y.shape == x.shape and not jnp.isnan(y).any()
+        # router only has 40 outputs -> one-hot over 48 leaves pads at 0
+        assert p["router"]["w"].shape[1] == 40
+
+    def test_moe_grads_flow_to_experts(self):
+        p = nn.init_moe(KEY, 32, 64, 4)
+        x = jax.random.normal(KEY, (2, 16, 32))
+        g = jax.grad(lambda p_: nn.moe(p_, x, top_k=2)[0].sum())(p)
+        assert float(jnp.abs(g["experts"]["wg"]).sum()) > 0.0
+        assert all(jnp.isfinite(v).all() for v in jax.tree.leaves(g))
+
+
+class TestChunkedLoss:
+    def test_matches_unchunked(self):
+        from repro.train import chunked_lm_head_loss, lm_loss
+        from repro.nn.linear import init_linear, linear
+        head = init_linear(KEY, 32, 97)
+        h = jax.random.normal(KEY, (2, 64, 32))
+        labels = jax.random.randint(jax.random.PRNGKey(3), (2, 64), 0, 97)
+        labels = labels.at[:, :5].set(-100)      # masked prefix
+        l1, m1 = chunked_lm_head_loss(head, h, labels, chunk=16)
+        l2, m2 = lm_loss(linear(head, h), labels)
+        assert jnp.abs(l1 - l2) < 1e-5
+        assert int(m1["n_tokens"]) == int(m2["n_tokens"])
+
+    def test_grads_match_unchunked(self):
+        from repro.train import chunked_lm_head_loss, lm_loss
+        from repro.nn.linear import init_linear, linear
+        head = init_linear(KEY, 16, 31)
+        h = jax.random.normal(KEY, (1, 32, 16))
+        labels = jax.random.randint(jax.random.PRNGKey(4), (1, 32), 0, 31)
+        g1 = jax.grad(lambda hh: chunked_lm_head_loss(head, hh, labels,
+                                                      chunk=8)[0])(h)
+        g2 = jax.grad(lambda hh: lm_loss(linear(head, hh), labels)[0])(h)
+        assert jnp.abs(g1 - g2).max() < 1e-5

@@ -1,0 +1,75 @@
+"""End-to-end behaviour tests: the full OPD story on a small pipeline —
+train briefly with expert guidance, then beat the weakest baselines (the
+paper's headline claim, at smoke scale)."""
+import numpy as np
+import pytest
+
+from repro.cluster import PipelineEnv, make_pipeline, make_trace
+from repro.configs import ARCHS
+from repro.core import (GreedyPolicy, IPAPolicy, OPDPolicy, OPDTrainer,
+                        PPOConfig, RandomPolicy, run_episode)
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    pipe = make_pipeline(
+        [[ARCHS["xlstm-125m"], ARCHS["llama3.2-1b"]],
+         [ARCHS["granite-moe-3b-a800m"], ARCHS["starcoder2-3b"]]],
+        name="e2e-2stage", w_max=32.0)
+
+    def make_env(seed=0, kind="fluctuating"):
+        return PipelineEnv(pipe, make_trace(kind, seed=seed), seed=seed)
+
+    trainer = OPDTrainer(pipe, make_env,
+                         ppo=PPOConfig(epochs=2, expert_freq=2), seed=0)
+    trainer.train(6)
+    return pipe, make_env, trainer
+
+
+def test_training_converges_upward(small_setup):
+    _, _, trainer = small_setup
+    h = trainer.history
+    agent_rewards = [r for r, e in zip(h["reward"], h["expert"]) if not e]
+    # by episode 6 the agent should not be worse than its own first episode
+    assert agent_rewards[-1] >= agent_rewards[0] - 1.0
+
+
+def test_opd_beats_random(small_setup):
+    pipe, make_env, trainer = small_setup
+    opd = run_episode(make_env(7), OPDPolicy(pipe, trainer.params))
+    rnd = run_episode(make_env(7), RandomPolicy(pipe, seed=7))
+    assert opd["reward"].mean() > rnd["reward"].mean()
+
+
+def test_opd_decision_faster_than_solver(small_setup):
+    """Fig. 6: OPD decision time ~constant, far below solver enumeration on
+    complex pipelines."""
+    big = make_pipeline(
+        [[ARCHS["xlstm-125m"], ARCHS["llama3.2-1b"], ARCHS["starcoder2-3b"]]] * 4,
+        name="big", w_max=64.0)
+    env = PipelineEnv(big, make_trace("steady_low", seed=0))
+    env.reset()
+    ipa = IPAPolicy(big)
+    ipa(env)
+
+    pipe, make_env, trainer = small_setup
+    opd = OPDPolicy(pipe, trainer.params)
+    e2 = make_env(3)
+    e2.reset()
+    opd(e2)        # warm
+    opd(e2)
+    assert np.mean(opd.decision_times[-1]) < ipa.decision_times[-1] * 5
+
+
+def test_reward_tracks_objective(small_setup):
+    """Reward (Eq. 7) and objective (Eq. 4) must rank configs consistently
+    when batch sizes are equal and cost weights are aligned."""
+    from repro.core.mdp import Config, QoSWeights, reward, objective
+    pipe, _, _ = small_setup
+    w = QoSWeights()
+    w = QoSWeights(beta_c=w.lam)     # align Eq. 7 and Eq. 4 cost weights
+    c1 = Config(z=(0, 0), f=(1, 1), b=(4, 4))
+    c2 = Config(z=(3, 3), f=(2, 2), b=(4, 4))
+    r1, r2 = reward(pipe, c1, 50.0, w), reward(pipe, c2, 50.0, w)
+    o1, o2 = objective(pipe, c1, 50.0, w), objective(pipe, c2, 50.0, w)
+    assert (r1 < r2) == (o1 < o2)
