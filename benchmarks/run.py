@@ -17,17 +17,20 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced episode/epoch counts (CI-sized)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: fig3,fig45,fig6,fig7,roofline")
+                    help="comma-separated subset: "
+                         "fig3,fig45,fig6,fig7,roofline,runtime")
     args = ap.parse_args()
 
     from benchmarks import (fig3_predictor, fig45_workloads,
-                            fig6_decision_time, fig7_convergence, roofline)
+                            fig6_decision_time, fig7_convergence, roofline,
+                            runtime_throughput)
     suites = {
         "fig3": fig3_predictor.run,
         "fig45": fig45_workloads.run,
         "fig6": fig6_decision_time.run,
         "fig7": fig7_convergence.run,
         "roofline": roofline.run,
+        "runtime": runtime_throughput.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     print("benchmark,metric,value,reference")

@@ -1,85 +1,111 @@
-"""End-to-end serving driver: REAL JAX models behind every pipeline stage,
-batched requests flowing through the stage chain, and the OPD agent
-reconfiguring the live system (variant switch / batch size / replicas)
-while it serves.
+"""Closed-loop serving demo: the event-driven runtime serves a bursty
+arrival trace through a multi-stage pipeline while the OPD agent
+reconfigures the live system (variant switch / replicas / batch size) every
+adaptation interval.
 
-    PYTHONPATH=src python examples/serve_pipeline.py [--requests 96] [--train-episodes 4]
+    PYTHONPATH=src python examples/serve_pipeline.py \
+        [--horizon 120] [--train-episodes 4] [--scenario bursty] [--real]
 
-This is the paper's Fig.1 system: Batcher = per-stage centralized queue,
-PipelineServer = gRPC stage chain, apply_config = the Kubernetes-API
-reconfiguration. Models are smoke-scale instances of the assigned
-architectures so the driver runs on CPU in minutes.
+The agent trains on the analytic simulator (PipelineEnv), then controls the
+real thing: RuntimeEnv steps the virtual-time event loop one 10 s interval
+per decision — continuous batchers (timeout-or-full), per-batch service
+times from the perf model, variant switches paying cold start in virtual
+time. ``--real`` additionally attaches smoke-scale JAX models as stage
+executors so request tokens flow through live forward passes.
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.cluster import PipelineEnv, make_trace
+from repro.cluster import PipelineEnv, RuntimeEnv
 from repro.cluster.perf_model import make_pipeline
 from repro.configs import ARCHS
 from repro.core import OPDPolicy, OPDTrainer, PPOConfig
-from repro.data.tokens import synthetic_requests
-from repro.serving.batcher import Request
-from repro.serving.engine import PipelineServer, StageServer
+from repro.serving import SCENARIOS, make_arrivals
+from repro.serving.engine import StageServer
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--requests", type=int, default=96)
+ap.add_argument("--horizon", type=int, default=120,
+                help="virtual seconds of traffic to serve")
 ap.add_argument("--train-episodes", type=int, default=4)
+ap.add_argument("--scenario", default="bursty", choices=SCENARIOS)
 ap.add_argument("--seq-len", type=int, default=32)
+ap.add_argument("--real", action="store_true",
+                help="attach live smoke-scale JAX models as stage executors")
 args = ap.parse_args()
 
-# --- the data plane: 3 stages, each with two smoke-scale variant models ----
-stage_archs = [
-    [ARCHS["xlstm-125m"].smoke(), ARCHS["whisper-small"].smoke()],
-    [ARCHS["llama3.2-1b"].smoke(), ARCHS["starcoder2-3b"].smoke()],
-    [ARCHS["granite-moe-3b-a800m"].smoke(), ARCHS["zamba2-2.7b"].smoke()],
-]
-t0 = time.time()
-stages = [StageServer(f"stage{i}", variants, seq_len=args.seq_len,
-                      batch_size=4, seed=i)
-          for i, variants in enumerate(stage_archs)]
-server = PipelineServer(stages)
-print(f"built 3-stage pipeline with {sum(len(s) for s in stage_archs)} live "
-      f"JAX models in {time.time() - t0:.1f}s")
+STAGE_ARCHS = [("xlstm-125m", "whisper-small"),
+               ("llama3.2-1b", "starcoder2-3b"),
+               ("granite-moe-3b-a800m", "zamba2-2.7b")]
 
-# --- the control plane: OPD agent trained on the matching simulator --------
-pipe = make_pipeline([[ARCHS[n] for n in ("xlstm-125m", "whisper-small")],
-                      [ARCHS[n] for n in ("llama3.2-1b", "starcoder2-3b")],
-                      [ARCHS[n] for n in ("granite-moe-3b-a800m", "zamba2-2.7b")]],
+pipe = make_pipeline([[ARCHS[n] for n in names] for names in STAGE_ARCHS],
                      name="serve3", quants=("bf16",))
 
+arrivals = make_arrivals(args.scenario, rate=25.0, seed=7)
+
+# --- control plane: OPD agent trained on the matching analytic simulator ---
+# (trained against the scenario's own rate profile so the expert-guided
+# episodes cover the demand levels the runtime will actually see)
+train_trace = arrivals.rates(1200)
 
 def make_env(seed):
-    return PipelineEnv(pipe, make_trace("fluctuating", seed=seed), seed=seed)
+    return PipelineEnv(pipe, np.roll(train_trace, 37 * seed), seed=seed)
 
-
+t0 = time.time()
 trainer = OPDTrainer(pipe, make_env, ppo=PPOConfig(expert_freq=2), seed=0)
 for ep in range(1, args.train_episodes + 1):
     trainer.train_episode(ep, env_seed=ep)
 agent = OPDPolicy(pipe, trainer.params)
-env = make_env(123)
-env.reset()
+print(f"trained OPD agent for {args.train_episodes} episodes "
+      f"in {time.time() - t0:.1f}s")
 
-# --- serve: requests arrive in waves; agent reconfigures between waves -----
-reqs = synthetic_requests(args.requests, seq_len=args.seq_len)
-waves = np.array_split(np.asarray(reqs, dtype=object), 4)
-served_total = 0
-for w, wave in enumerate(waves):
-    cfg = agent(env)                       # control decision (measured)
-    server.apply_config(cfg)
-    env.step(cfg)                          # advance the simulated cell
+# --- data plane: the event-driven runtime -----------------------------------
+executors = None
+if args.real:
     t0 = time.time()
-    for req in wave:
-        server.submit(req)
-    done = server.process()
-    dt = time.time() - t0
-    served_total = len(done)
-    print(f"wave {w}: cfg z={cfg.z} f={cfg.f} b={cfg.b} -> "
-          f"{len(wave)} reqs in {dt:.2f}s "
-          f"({len(wave) / max(dt, 1e-9):.1f} req/s), "
-          f"decision {agent.decision_times[-1] * 1e3:.1f} ms")
+    servers = [StageServer(f"stage{i}", [ARCHS[n].smoke() for n in names],
+                           seq_len=args.seq_len, seed=i)
+               for i, names in enumerate(STAGE_ARCHS)]
+    executors = [s.execute for s in servers]
+    print(f"built {sum(len(n) for n in STAGE_ARCHS)} live JAX models "
+          f"in {time.time() - t0:.1f}s")
 
-print(f"served {served_total}/{args.requests} requests end-to-end; "
-      f"{server.switch_count} live variant switches")
-assert served_total == args.requests, "every request must complete"
+env = RuntimeEnv(pipe, arrivals, horizon=args.horizon,
+                 executors=executors, seq_len=args.seq_len)
+print(f"loaded {env.submitted} requests over {args.horizon}s "
+      f"({args.scenario} arrivals); serving with OPD in the loop\n")
+
+done = False
+costs = []
+wall0 = time.time()
+while not done:
+    cfg = agent(env)                       # control decision (measured, wall)
+    _, r, done, info = env.step(cfg)       # 10 s of virtual serving
+    costs.append(info["cost"])
+    p95 = info["p95"]
+    print(f"[t={env.runtime.now:5.0f}s] z={cfg.z} f={cfg.f} b={cfg.b} "
+          f"demand={info['demand']:5.1f}/s served={info['processed']:4d} "
+          f"p50={info['p50'] * 1e3:6.1f}ms p95={p95 * 1e3:6.1f}ms "
+          f"p99={info['p99'] * 1e3:6.1f}ms backlog={info['backlog']:4d} "
+          f"cost={info['cost']:4.0f} "
+          f"decision={agent.decision_times[-1] * 1e3:5.1f}ms"
+          + (" [switch]" if info["switched"] else ""))
+
+summary = env.drain()                      # finish in-flight work
+wall = time.time() - wall0
+rt = env.runtime
+print(f"\nserved {summary['served']}/{env.submitted} requests "
+      f"({summary['throughput_rps']:.1f} req/s virtual, "
+      f"{summary['served'] / max(wall, 1e-9):.0f} req/s wall)")
+print(f"latency p50={summary['p50'] * 1e3:.1f}ms "
+      f"p95={summary['p95'] * 1e3:.1f}ms p99={summary['p99'] * 1e3:.1f}ms "
+      f"mean={summary['latency_mean_s'] * 1e3:.1f}ms")
+print(f"mean cost={np.mean(costs):.1f} chips, "
+      f"{rt.switch_count} live variant switches, "
+      f"mean batch={summary['mean_batch_size']:.1f}, "
+      f"decision H={sum(agent.decision_times):.3f}s over "
+      f"{len(agent.decision_times)} decisions")
+print(f"stage utilization: "
+      + " ".join(f"{u:.2f}" for u in rt.utilization()))
+assert summary["served"] == env.submitted, "every request must complete"

@@ -1,4 +1,5 @@
 from repro.cluster.workloads import make_trace, WORKLOADS
 from repro.cluster.perf_model import variant_from_arch, default_pipeline, make_pipeline
-from repro.cluster.env import PipelineEnv
+from repro.cluster.env import (PipelineEnv, RuntimeEnv, ADAPTATION_INTERVAL,
+                               COLD_START_FRACTION)
 from repro.cluster.monitor import Monitor

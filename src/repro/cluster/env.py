@@ -1,37 +1,42 @@
-"""Edge-cell simulator exposing the paper's MDP (state Eq. 5, action Eq. 6,
-reward Eq. 7) as a gym-style environment.
+"""Edge-cell environments exposing the paper's MDP (state Eq. 5, action
+Eq. 6, reward Eq. 7) as gym-style environments.
 
-Each step = one 10 s adaptation interval over a 1 Hz workload trace. The
-stage latency/throughput physics come from perf_model (analytic v5e roofline
-of the real architectures); variant switches pay a cold-start penalty
-(container re-pull in the paper, weight re-shard here).
+Two backends share the MDP plumbing (``_ConfigEnvBase``: observation layout,
+default config, predictor hook):
+
+- ``PipelineEnv`` — the analytic simulator: each step = one 10 s adaptation
+  interval over a 1 Hz workload trace, physics from perf_model's roofline
+  latency curves, cold starts charged as a capacity fraction.
+- ``RuntimeEnv``  — the closed-loop adapter over the event-driven
+  ``serving.runtime.ServingRuntime``: each step applies the action to the
+  live runtime (variant switches pay cold start in *virtual time*), advances
+  the event loop one adaptation interval, and scores *measured* telemetry
+  (served throughput, end-to-end latency percentiles, queue backlog) with
+  the same Eq. (3)/(7) formulas via ``score_measurements``. The predictor
+  reads the runtime's per-second arrival history through the same Monitor.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from repro.cluster.monitor import Monitor
-from repro.core.mdp import (Config, Pipeline, QoSWeights, evaluate,
-                            resource_usage)
+from repro.core.mdp import (Config, Pipeline, QoSWeights, accuracy_and_cost,
+                            evaluate, resource_usage, score_measurements,
+                            stage_latency)
 
 ADAPTATION_INTERVAL = 10          # seconds between decisions (paper §VI-B)
 COLD_START_FRACTION = 0.3         # capacity lost in the interval after a switch
 
 
-class PipelineEnv:
-    def __init__(self, pipe: Pipeline, trace: np.ndarray, *,
-                 weights: QoSWeights | None = None, history: int = 120,
-                 predictor=None, seed: int = 0):
-        self.pipe = pipe
-        self.trace = np.asarray(trace, dtype=np.float64)
-        self.w = weights or QoSWeights()
-        self.monitor = Monitor(history)
-        self.predictor = predictor           # callable: load_hist -> predicted
-        self.rng = np.random.default_rng(seed)
-        self.n_steps = len(self.trace) // ADAPTATION_INTERVAL
-        self.reset()
+class _ConfigEnvBase:
+    """Shared MDP plumbing: Eq. (5) observation, default config, predictor."""
 
-    # ------------------------------------------------------------ state --
+    pipe: Pipeline
+    cfg: Config
+    monitor: Monitor
+    predictor = None                 # callable: load_hist -> predicted load
 
     @property
     def state_dim(self) -> int:
@@ -58,21 +63,38 @@ class PipelineEnv:
         return np.asarray(rows, dtype=np.float32).reshape(-1)
 
     def _current_load(self) -> float:
-        s = self.t * ADAPTATION_INTERVAL
-        return float(self.trace[max(0, s - 1)])
+        raise NotImplementedError
 
     def _predicted_load(self) -> float:
         if self.predictor is not None:
             return float(self.predictor(self.monitor.load_history()))
         return self._current_load()
 
-    # ------------------------------------------------------------- api --
-
     def default_config(self) -> Config:
         N = self.pipe.n_tasks
         return Config(z=tuple(0 for _ in range(N)),
                       f=tuple(1 for _ in range(N)),
                       b=tuple(1 for _ in range(N)))
+
+
+class PipelineEnv(_ConfigEnvBase):
+    def __init__(self, pipe: Pipeline, trace: np.ndarray, *,
+                 weights: QoSWeights | None = None, history: int = 120,
+                 predictor=None, seed: int = 0):
+        self.pipe = pipe
+        self.trace = np.asarray(trace, dtype=np.float64)
+        self.w = weights or QoSWeights()
+        self.monitor = Monitor(history)
+        self.predictor = predictor           # callable: load_hist -> predicted
+        self.rng = np.random.default_rng(seed)
+        self.n_steps = len(self.trace) // ADAPTATION_INTERVAL
+        self.reset()
+
+    def _current_load(self) -> float:
+        s = self.t * ADAPTATION_INTERVAL
+        return float(self.trace[max(0, s - 1)])
+
+    # ------------------------------------------------------------- api --
 
     def reset(self) -> np.ndarray:
         self.t = 0
@@ -113,3 +135,113 @@ class PipelineEnv:
                 "processed": m["T"], "capacity": m["capacity"],
                 "infeasible": infeasible}
         return self._observe(), float(r), done, info
+
+
+class RuntimeEnv(_ConfigEnvBase):
+    """Closed-loop MDP over the live event-driven runtime.
+
+    Arrivals are admitted up-front from an ``ArrivalProcess`` over
+    ``horizon`` virtual seconds; each ``step(action)`` reconfigures the
+    runtime (cold start paid in virtual time) and advances the event loop by
+    one adaptation interval. Reward terms come from *measured* serving:
+    T = completions/s in the interval, L = mean end-to-end latency of those
+    completions, E = arrival rate − served rate (backlog growth).
+    """
+
+    def __init__(self, pipe: Pipeline, arrivals, *, horizon: int = 120,
+                 weights: QoSWeights | None = None, history: int = 120,
+                 predictor=None, executors: list | None = None,
+                 max_wait: float | None = None, seq_len: int = 32,
+                 vocab: int = 256):
+        # all stochasticity derives from arrivals.seed (arrival times and
+        # request tokens) — the env itself is deterministic
+        from repro.serving.runtime import DEFAULT_MAX_WAIT
+        self.pipe = pipe
+        self.arrivals = arrivals
+        self.horizon = int(horizon)
+        self.w = weights or QoSWeights()
+        self.predictor = predictor
+        self.executors = executors
+        self.max_wait = DEFAULT_MAX_WAIT if max_wait is None else max_wait
+        self.seq_len = seq_len
+        self.vocab = vocab
+        self.monitor = Monitor(history)
+        self.n_steps = max(1, self.horizon // ADAPTATION_INTERVAL)
+        self.reset()
+
+    def _current_load(self) -> float:
+        return float(self.monitor.load_history()[-1])
+
+    # ------------------------------------------------------------- api --
+
+    def reset(self) -> np.ndarray:
+        from repro.serving.runtime import ServingRuntime
+        self.t = 0
+        self.cfg = self.default_config()
+        self.runtime = ServingRuntime.from_pipeline(
+            self.pipe, cfg=self.cfg, max_wait=self.max_wait,
+            seq_len=self.seq_len, executors=self.executors)
+        self.submitted = self.runtime.load(self.arrivals, self.horizon,
+                                           vocab=self.vocab)
+        # prefill the predictor's history with the t=0 expected rate — the
+        # newest slot is what _current_load reads for the first observation
+        self.monitor = Monitor(self.monitor.history)
+        rate0 = float(self.arrivals.rates(1)[0])
+        for _ in range(self.monitor.history):
+            self.monitor.record(rate0)
+        return self._observe()
+
+    def step(self, action: Config):
+        rt, w = self.runtime, self.w
+        self.cfg = action
+        t0 = rt.now
+        t1 = t0 + ADAPTATION_INTERVAL
+        wall0 = time.perf_counter()
+        switched = rt.apply_config(
+            action, cold_start=COLD_START_FRACTION * ADAPTATION_INTERVAL)
+        apply_wall_s = time.perf_counter() - wall0
+        rt.run_until(t1)
+
+        tel = rt.telemetry
+        arrived = tel.arrived_in(t0, t1)
+        completed = tel.completed_in(t0, t1)
+        demand = arrived / ADAPTATION_INTERVAL
+        T = completed / ADAPTATION_INTERVAL
+        lat = tel.latencies(t0, t1)
+        if lat.size:
+            L = float(lat.mean())
+        else:
+            # nothing finished this interval (cold start / deep queues):
+            # charge the analytic stage latency so the penalty stays smooth
+            L = sum(stage_latency(task.variants[action.z[n]], action.b[n],
+                                  action.f[n], max(demand, 1.0))
+                    for n, task in enumerate(self.pipe.tasks))
+        E = demand - T
+        V, C = accuracy_and_cost(self.pipe, action)
+        m = score_measurements(V, C, T, L, E, w, max_batch=max(action.b))
+        r = m["reward"]
+        infeasible = resource_usage(self.pipe, action) > self.pipe.w_max
+        if infeasible:
+            r -= 50.0
+
+        # measured per-second arrivals feed the predictor's load history
+        for c in tel.load_history(t1, ADAPTATION_INTERVAL):
+            self.monitor.record(float(c), qos=m["qos"], cost=m["C"],
+                                latency=m["L"], throughput=m["T"],
+                                excess=m["E"])
+
+        self.t += 1
+        done = self.t >= self.n_steps
+        info = {"qos": m["qos"], "cost": m["C"], "latency": m["L"],
+                "throughput": m["T"], "excess": m["E"], "demand": demand,
+                "processed": completed, "infeasible": infeasible,
+                "switched": switched, "apply_wall_s": apply_wall_s,
+                "backlog": rt.in_system,
+                "queue_depths": rt.queue_depths(),
+                **tel.latency_percentiles(t0=t0, t1=t1)}
+        return self._observe(), float(r), done, info
+
+    def drain(self) -> dict:
+        """Finish all in-flight work after the last interval; final summary."""
+        self.runtime.drain()
+        return self.runtime.summary()

@@ -141,16 +141,37 @@ def feasible(pipe: Pipeline, cfg: Config) -> bool:
     return True
 
 
+def score_measurements(V: float, C: float, T: float, L: float, E: float,
+                       w: QoSWeights, *, max_batch: int) -> dict:
+    """Eq. (3)/(4)/(7) scoring of one interval's metrics.
+
+    The metrics may come from the analytic model (``pipeline_metrics``) or
+    from measured telemetry of the event-driven runtime — the QoS, reward and
+    objective formulas are shared so env-sim and runtime-sim agree.
+    """
+    q = w.alpha * V + w.beta * T - L - (w.gamma * E if E >= 0
+                                        else w.delta * (-E))
+    r = q - w.beta_c * C - w.gamma_b * max_batch
+    return {"V": V, "C": C, "T": T, "L": L, "E": E,
+            "qos": q, "reward": r, "objective": q - w.lam * C}
+
+
+def accuracy_and_cost(pipe: Pipeline, cfg: Config) -> tuple[float, float]:
+    """Eq. (1)/(2): pipeline accuracy V and chip cost C of a configuration."""
+    V = sum(task.variants[cfg.z[n]].accuracy for n, task in enumerate(pipe.tasks))
+    C = sum(task.variants[cfg.z[n]].cost * cfg.f[n]
+            for n, task in enumerate(pipe.tasks))
+    return V, C
+
+
 def evaluate(pipe: Pipeline, cfg: Config, demand: float, w: QoSWeights,
              *, cold_frac: float = 0.0) -> dict:
     """All paper metrics for one interval: Eq. (1)-(4) and (7)."""
     V, C, T, L, E, capacity = pipeline_metrics(pipe, cfg, demand,
                                                cold_frac=cold_frac)
-    q = w.alpha * V + w.beta * T - L - (w.gamma * E if E >= 0
-                                        else w.delta * (-E))
-    r = q - w.beta_c * C - w.gamma_b * max(cfg.b)
-    return {"V": V, "C": C, "T": T, "L": L, "E": E, "capacity": capacity,
-            "qos": q, "reward": r, "objective": q - w.lam * C}
+    out = score_measurements(V, C, T, L, E, w, max_batch=max(cfg.b))
+    out["capacity"] = capacity
+    return out
 
 
 def qos(pipe: Pipeline, cfg: Config, demand: float, w: QoSWeights) -> float:

@@ -44,6 +44,10 @@ def run_episode(env, policy) -> dict:
     Returns per-step arrays: reward, qos, cost, latency, throughput, excess,
     and cumulative decision time H (if the policy records it)."""
     env.reset()
+    if hasattr(policy, "decision_times"):
+        # H must cover THIS episode only — a reused policy object would
+        # otherwise report cumulative time across episodes
+        policy.decision_times = []
     out = {k: [] for k in ("reward", "qos", "cost", "latency", "throughput",
                            "excess", "demand")}
     done = False

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_tpu_compiler_params
+
 NEG_INF = float(jnp.finfo(jnp.float32).min)
 
 
@@ -102,7 +104,7 @@ def decode_attention(q, k, v, valid_mask, *, bk: int = 512, interpret: bool = Tr
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf, maskf)

@@ -1,12 +1,19 @@
 """Serving launcher: batched single-token decode against a KV cache — the
-data plane the OPD controller manages.
+data plane the OPD controller manages — plus the event-driven pipeline mode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         [--batch 4] [--context 128] [--tokens 32]
 
-Runs prefill once to populate the cache, then streams decode steps. On TPU
-the same serve_step is what launch/dryrun.py compiles for the decode_32k /
-long_500k shapes of the production mesh.
+    PYTHONPATH=src python -m repro.launch.serve --pipeline \
+        [--scenario bursty] [--horizon 120]
+
+Single-arch mode runs prefill once to populate the cache, then streams
+decode steps; on TPU the same serve_step is what launch/dryrun.py compiles
+for the decode_32k / long_500k shapes of the production mesh. ``--pipeline``
+instead drives the virtual-time serving runtime (serving.runtime) over an
+arrival scenario with the greedy controller in the loop, printing per-
+interval telemetry — the quickest way to exercise the serving stack without
+training an agent.
 """
 from __future__ import annotations
 
@@ -21,6 +28,34 @@ from repro.configs import ARCHS
 from repro.models import api
 
 
+def run_pipeline(args):
+    from repro.cluster import RuntimeEnv
+    from repro.cluster.perf_model import make_pipeline
+    from repro.core import GreedyPolicy
+    from repro.serving import make_arrivals
+
+    pipe = make_pipeline(
+        [[ARCHS["whisper-small"], ARCHS["xlstm-125m"]],
+         [ARCHS["llama3.2-1b"], ARCHS["starcoder2-3b"]]],
+        name="serve2", quants=("bf16",))
+    arrivals = make_arrivals(args.scenario, rate=args.rate, seed=3)
+    env = RuntimeEnv(pipe, arrivals, horizon=args.horizon)
+    policy = GreedyPolicy(pipe)
+    print(f"{args.scenario}: {env.submitted} requests over {args.horizon}s")
+    done = False
+    while not done:
+        cfg = policy(env)
+        _, _, done, info = env.step(cfg)
+        print(f"t={env.runtime.now:5.0f}s z={cfg.z} f={cfg.f} b={cfg.b} "
+              f"demand={info['demand']:5.1f}/s served={info['processed']:4d} "
+              f"p95={info['p95'] * 1e3:7.1f}ms backlog={info['backlog']}")
+    s = env.drain()
+    print(f"served {s['served']}/{env.submitted} "
+          f"({s['throughput_rps']:.1f} req/s) "
+          f"p50={s['p50'] * 1e3:.0f}ms p95={s['p95'] * 1e3:.0f}ms "
+          f"p99={s['p99'] * 1e3:.0f}ms")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b", choices=sorted(ARCHS))
@@ -29,7 +64,17 @@ def main():
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="serve an arrival scenario through the event-driven "
+                         "pipeline runtime instead of single-arch decode")
+    from repro.serving.arrivals import SCENARIOS
+    ap.add_argument("--scenario", default="bursty", choices=SCENARIOS)
+    ap.add_argument("--horizon", type=int, default=120)
+    ap.add_argument("--rate", type=float, default=25.0)
     args = ap.parse_args()
+
+    if args.pipeline:
+        return run_pipeline(args)
 
     cfg = ARCHS[args.arch].smoke() if args.smoke else ARCHS[args.arch]
     if cfg.enc_len:

@@ -1,2 +1,9 @@
-from repro.serving.batcher import Batcher, Request
+from repro.serving.batcher import (Batcher, ContinuousBatcher, Request,
+                                   stack_tokens)
 from repro.serving.engine import StageServer, PipelineServer
+from repro.serving.arrivals import (ArrivalProcess, PoissonArrivals,
+                                    TraceArrivals, BurstyArrivals,
+                                    RampArrivals, make_arrivals, SCENARIOS)
+from repro.serving.telemetry import Telemetry, percentile
+from repro.serving.runtime import (ServingRuntime, RuntimeStage,
+                                   COLD_START_SECONDS)

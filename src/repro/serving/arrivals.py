@@ -1,0 +1,122 @@
+"""Pluggable arrival processes for the event-driven serving runtime.
+
+Each process defines a per-second rate profile ``rates(horizon)`` (req/s)
+and generates concrete arrival timestamps as a piecewise-homogeneous Poisson
+process: for second ``s`` draw ``N ~ Poisson(rates[s])`` arrivals placed
+uniformly inside ``[s, s+1)``. Deterministic per seed, so runtime runs are
+reproducible and the environment can prefill the predictor's load history
+with the expected-rate profile.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ArrivalProcess:
+    """Base: subclasses implement ``rates(horizon) -> [horizon] req/s``."""
+
+    def __init__(self, *, seed: int = 0):
+        self.seed = seed
+
+    def rates(self, horizon: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def generate(self, horizon: float) -> np.ndarray:
+        """Sorted arrival timestamps (virtual seconds) in [0, horizon)."""
+        rng = np.random.default_rng(self.seed)
+        seconds = int(np.ceil(horizon))
+        lam = np.asarray(self.rates(seconds), dtype=np.float64)
+        times = []
+        for s in range(seconds):
+            n = rng.poisson(max(lam[s], 0.0))
+            if n:
+                times.append(rng.uniform(s, s + 1, n))
+        if not times:
+            return np.empty(0, dtype=np.float64)
+        out = np.sort(np.concatenate(times))
+        return out[out < horizon]
+
+
+class PoissonArrivals(ArrivalProcess):
+    """Homogeneous Poisson process at ``rate`` req/s."""
+
+    def __init__(self, rate: float, *, seed: int = 0):
+        super().__init__(seed=seed)
+        self.rate = float(rate)
+
+    def rates(self, horizon: int) -> np.ndarray:
+        return np.full(horizon, self.rate)
+
+
+class TraceArrivals(ArrivalProcess):
+    """Trace-driven: per-second rates from a workload trace (req/s), e.g.
+    ``cluster.workloads.make_trace``. The trace tiles if shorter than the
+    horizon."""
+
+    def __init__(self, trace: np.ndarray, *, seed: int = 0):
+        super().__init__(seed=seed)
+        self.trace = np.asarray(trace, dtype=np.float64)
+
+    def rates(self, horizon: int) -> np.ndarray:
+        reps = int(np.ceil(horizon / len(self.trace)))
+        return np.tile(self.trace, reps)[:horizon]
+
+
+class BurstyArrivals(ArrivalProcess):
+    """Diurnal sinusoid around ``base_rate`` with deterministic square bursts
+    to ``burst_rate`` every ``period`` seconds for ``burst_len`` seconds —
+    the adversarial pattern for a fixed provisioning policy."""
+
+    def __init__(self, base_rate: float, burst_rate: float, *,
+                 period: float = 60.0, burst_len: float = 10.0,
+                 diurnal_period: float = 300.0, seed: int = 0):
+        super().__init__(seed=seed)
+        self.base_rate = float(base_rate)
+        self.burst_rate = float(burst_rate)
+        self.period = float(period)
+        self.burst_len = float(burst_len)
+        self.diurnal_period = float(diurnal_period)
+
+    def rates(self, horizon: int) -> np.ndarray:
+        t = np.arange(horizon, dtype=np.float64)
+        lam = self.base_rate * (1.0 + 0.25 * np.sin(
+            2 * np.pi * t / self.diurnal_period))
+        in_burst = (t % self.period) < self.burst_len
+        lam[in_burst] = self.burst_rate
+        return lam
+
+
+class RampArrivals(ArrivalProcess):
+    """Linear ramp from ``start_rate`` to ``end_rate`` over the horizon —
+    exercises the controller's scale-up path."""
+
+    def __init__(self, start_rate: float, end_rate: float, *, seed: int = 0):
+        super().__init__(seed=seed)
+        self.start_rate = float(start_rate)
+        self.end_rate = float(end_rate)
+
+    def rates(self, horizon: int) -> np.ndarray:
+        return np.linspace(self.start_rate, self.end_rate, max(horizon, 1))
+
+
+SCENARIOS = ("bursty", "poisson", "ramp", "trace")
+
+
+def make_arrivals(scenario: str, *, rate: float = 25.0, seed: int = 0,
+                  trace: np.ndarray | None = None) -> ArrivalProcess:
+    """The named scenarios every driver (example, launcher, benchmark)
+    shares, scaled around ``rate`` req/s. ``trace`` overrides the default
+    fluctuating workload trace for the "trace" scenario."""
+    if scenario == "poisson":
+        return PoissonArrivals(rate, seed=seed)
+    if scenario == "bursty":
+        return BurstyArrivals(0.6 * rate, 1.8 * rate, period=60,
+                              burst_len=10, seed=seed)
+    if scenario == "ramp":
+        return RampArrivals(0.2 * rate, 2.4 * rate, seed=seed)
+    if scenario == "trace":
+        if trace is None:
+            from repro.cluster.workloads import make_trace
+            trace = make_trace("fluctuating", seed=seed) / 2.0
+        return TraceArrivals(trace, seed=seed)
+    raise ValueError(f"unknown arrival scenario {scenario!r}")

@@ -65,8 +65,7 @@ class StageServer:
         if replicas is not None:
             self.replicas = int(replicas)
 
-    def _make_batch(self, tokens: np.ndarray) -> dict:
-        cfg = self.cfg
+    def _make_batch(self, tokens: np.ndarray, cfg: ArchConfig) -> dict:
         batch = {"tokens": jnp.asarray(tokens % cfg.vocab)}
         B = tokens.shape[0]
         if cfg.family == "vlm":
@@ -79,17 +78,30 @@ class StageServer:
                 key, (B, cfg.enc_len, cfg.d_model), jnp.float32) * 0.02
         return batch
 
+    def execute(self, z: int, tokens: np.ndarray) -> np.ndarray:
+        """Run variant ``z`` on tokens [B, S] -> output tokens [B, S].
+
+        This is the real-JAX execution hook: the event-driven runtime
+        (serving.runtime) can attach it as a stage ``executor`` so virtual
+        time is charged analytically while outputs flow through live models.
+        Batches arrive at their actual size (no tail padding) — jit retraces
+        per distinct (z, B) shape and then reuses the compiled kernel.
+        """
+        z = int(z) % len(self.variants)
+        fwd = self._fwd(z)
+        return np.asarray(fwd(self.params[z],
+                              self._make_batch(tokens, self.variants[z])))
+
     def serve_pending(self) -> list[Request]:
         """Drain the queue; returns completed requests with stage output."""
         done = []
-        fwd = self._fwd(self.z)
         while True:
             nb = self.batcher.next_batch()
             if nb is None:
                 return done
             reqs, toks = nb
             # replicas split the batch (data parallel); sequential on CPU
-            out = np.asarray(fwd(self.params[self.z], self._make_batch(toks)))
+            out = self.execute(self.z, toks)
             for i, req in enumerate(reqs):
                 req.stage_outputs.append(out[i])
                 req.result = out[i]

@@ -1,0 +1,259 @@
+"""Event-driven, clock-stepped serving runtime.
+
+A virtual-time event loop drives requests from pluggable arrival processes
+(`serving.arrivals`) through per-stage continuous batchers (timeout-or-full
+dispatch, actual batch sizes — no tail padding) and replica pools. Per-batch
+service times are charged from the analytic perf model (each stage's
+`core.mdp.ModelVariant` latency curve, built by `cluster.perf_model`), with
+optional real JAX execution through a stage ``executor`` (e.g.
+`serving.engine.StageServer.execute`) so outputs flow through live models
+while virtual time stays deterministic.
+
+The OPD control loop closes over this runtime: ``apply_config`` is the live
+reconfiguration (paper: Kubernetes API) — a variant switch blocks the stage
+for ``COLD_START_SECONDS`` of virtual time (container re-pull / weight
+re-shard), replica and batch knobs take effect immediately. The
+`cluster.env.RuntimeEnv` adapter exposes the same MDP interface the analytic
+simulator does, scored from measured telemetry.
+
+Event ordering is deterministic: ties in virtual time break by insertion
+sequence (FIFO), so identical seeds reproduce identical schedules.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+
+import numpy as np
+
+from repro.core.mdp import Config, Pipeline, Task
+from repro.serving.batcher import ContinuousBatcher, Request, stack_tokens
+from repro.serving.telemetry import Telemetry
+
+# Virtual-time cost of a variant switch: the paper's cold start loses
+# COLD_START_FRACTION (0.3) of a 10 s adaptation interval's capacity.
+COLD_START_SECONDS = 3.0
+DEFAULT_MAX_WAIT = 0.25   # s a request may wait before a partial batch fires
+
+
+class RuntimeStage:
+    """One pipeline stage: variant timing models, a continuous batcher and a
+    replica pool. ``executor(z, tokens[B, S]) -> outputs [B, S]`` optionally
+    runs a real model; otherwise stage output = input tokens."""
+
+    def __init__(self, name: str, task: Task, *, z: int = 0, replicas: int = 1,
+                 batch_size: int = 1, max_wait: float = DEFAULT_MAX_WAIT,
+                 seq_len: int = 32, executor=None):
+        self.name = name
+        self.task = task
+        self.z = int(z) % len(task.variants)
+        self.replicas = max(1, int(replicas))
+        self.batcher = ContinuousBatcher(batch_size, max_wait=max_wait)
+        self.seq_len = seq_len
+        self.executor = executor
+        self.in_flight = 0
+        self.blocked_until = 0.0      # cold-start gate (virtual s)
+        self.busy_time = 0.0          # Σ replica-seconds of service charged
+        self.served = 0
+        self._pending_timer: float | None = None
+        # replica-seconds integral (replicas change across reconfigs)
+        self._cap_accum = 0.0
+        self._cap_since = 0.0
+
+    @property
+    def var(self):
+        return self.task.variants[self.z]
+
+    def service_time(self, batch: int) -> float:
+        return self.var.latency(batch)
+
+    def set_replicas(self, replicas: int, now: float):
+        self._cap_accum += (now - self._cap_since) * self.replicas
+        self._cap_since = now
+        self.replicas = max(1, int(replicas))
+
+    def replica_seconds(self, now: float) -> float:
+        return self._cap_accum + (now - self._cap_since) * self.replicas
+
+
+class ServingRuntime:
+    def __init__(self, stages: list[RuntimeStage], *, telemetry: Telemetry | None = None):
+        self.stages = stages
+        self.telemetry = telemetry or Telemetry()
+        self.now = 0.0
+        self.completed: list[Request] = []
+        self.in_system = 0            # arrived, not yet fully served
+        self.switch_count = 0
+        self._heap: list[tuple[float, int, str, object]] = []
+        self._seq = itertools.count()
+
+    # ----------------------------------------------------------- set-up --
+
+    @classmethod
+    def from_pipeline(cls, pipe: Pipeline, *, cfg: Config | None = None,
+                      max_wait: float = DEFAULT_MAX_WAIT, seq_len: int = 32,
+                      executors: list | None = None) -> "ServingRuntime":
+        """Stages mirror ``pipe``'s tasks; initial knobs from ``cfg``
+        (default: cheapest variant, 1 replica, batch 1)."""
+        if cfg is None:
+            n = pipe.n_tasks
+            cfg = Config(z=(0,) * n, f=(1,) * n, b=(1,) * n)
+        stages = [
+            RuntimeStage(task.name, task, z=cfg.z[i], replicas=cfg.f[i],
+                         batch_size=cfg.b[i], max_wait=max_wait,
+                         seq_len=seq_len,
+                         executor=executors[i] if executors else None)
+            for i, task in enumerate(pipe.tasks)
+        ]
+        return cls(stages)
+
+    def load(self, process, horizon: float, *, vocab: int = 256,
+             seq_len: int | None = None, rid_base: int = 0) -> int:
+        """Pre-register arrivals from ``process`` over [now, now+horizon)."""
+        seq_len = seq_len or self.stages[0].seq_len
+        times = process.generate(horizon) + self.now
+        rng = np.random.default_rng(process.seed + 1)
+        for i, t in enumerate(times):
+            toks = rng.integers(1, vocab, size=seq_len).astype(np.int32)
+            self.submit(Request(rid=rid_base + i, tokens=toks), at=float(t))
+        return len(times)
+
+    def submit(self, req: Request, *, at: float | None = None):
+        t = self.now if at is None else at
+        req.arrival = t
+        self._push(t, "arrival", req)
+
+    # ------------------------------------------------------ control API --
+
+    def apply_config(self, cfg: Config, *,
+                     cold_start: float = COLD_START_SECONDS) -> int:
+        """Live reconfiguration (the OPD action). Variant switches pay
+        ``cold_start`` virtual seconds of stage unavailability; queued
+        requests hold (nothing is dropped). Returns #stages switched."""
+        switched = 0
+        for n, stage in enumerate(self.stages):
+            z_new = int(cfg.z[n]) % len(stage.task.variants)
+            if z_new != stage.z:
+                switched += 1
+                stage.z = z_new
+                stage.blocked_until = max(stage.blocked_until,
+                                          self.now + cold_start)
+            stage.set_replicas(int(cfg.f[n]), self.now)
+            stage.batcher.batch_size = max(1, int(cfg.b[n]))
+        self.switch_count += switched
+        self.telemetry.record_reconfig(self.now, switched)
+        for i in range(len(self.stages)):
+            self._poke(i)
+        return switched
+
+    @property
+    def config(self) -> Config:
+        return Config(z=tuple(s.z for s in self.stages),
+                      f=tuple(s.replicas for s in self.stages),
+                      b=tuple(s.batcher.batch_size for s in self.stages))
+
+    # -------------------------------------------------------- event loop --
+
+    def _push(self, t: float, kind: str, payload):
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def run_until(self, t_end: float):
+        """Process all events with time <= t_end; clock lands on t_end."""
+        while self._heap and self._heap[0][0] <= t_end + 1e-12:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            self.now = max(self.now, t)
+            if kind == "arrival":
+                self._on_arrival(payload)
+            elif kind == "complete":
+                self._on_complete(*payload)
+            elif kind == "timer":
+                self._on_timer(payload)
+        self.now = max(self.now, t_end)
+
+    def drain(self):
+        """Run the loop dry — every admitted request completes."""
+        while self._heap:
+            self.run_until(self._heap[0][0])
+
+    # ---------------------------------------------------------- handlers --
+
+    def _on_arrival(self, req: Request):
+        self.in_system += 1
+        self.telemetry.record_arrival(self.now)
+        self.stages[0].batcher.put(req, self.now)
+        self._poke(0)
+
+    def _on_timer(self, i: int):
+        stage = self.stages[i]
+        if stage._pending_timer is not None and self.now >= stage._pending_timer - 1e-12:
+            stage._pending_timer = None
+        self._poke(i)
+
+    def _on_complete(self, i: int, reqs: list[Request], z: int):
+        stage = self.stages[i]
+        stage.in_flight -= 1
+        stage.served += len(reqs)
+        if stage.executor is not None:
+            out = np.asarray(stage.executor(
+                z, stack_tokens(reqs, stage.seq_len)))
+            for k, req in enumerate(reqs):
+                req.stage_outputs.append(out[k])
+                req.result = out[k]
+        else:
+            for req in reqs:
+                req.stage_outputs.append(req.tokens)
+                req.result = req.tokens
+        if i + 1 < len(self.stages):
+            nxt = self.stages[i + 1]
+            for req in reqs:
+                # next stage consumes this stage's output tokens
+                req.tokens = np.asarray(req.result, dtype=np.int32).reshape(-1)
+                nxt.batcher.put(req, self.now)
+            self._poke(i + 1)
+        else:
+            for req in reqs:
+                req.finish = self.now
+                self.telemetry.record_completion(req.rid, req.arrival, self.now)
+                self.completed.append(req)
+            self.in_system -= len(reqs)
+        self._poke(i)
+
+    def _poke(self, i: int):
+        """Dispatch every batch the stage can take now; otherwise arm a timer
+        for the next timeout-or-unblock instant."""
+        stage = self.stages[i]
+        while (stage.in_flight < stage.replicas
+               and self.now >= stage.blocked_until - 1e-12
+               and stage.batcher.ready(self.now)):
+            reqs = stage.batcher.pop(self.now)
+            service = stage.service_time(len(reqs))
+            stage.in_flight += 1
+            stage.busy_time += service
+            self.telemetry.record_batch(i, self.now, len(reqs), service,
+                                        len(stage.batcher))
+            # pin the dispatch-time variant: a mid-flight switch must not
+            # change which model serves an already-running batch
+            self._push(self.now + service, "complete", (i, reqs, stage.z))
+        if len(stage.batcher) and stage.in_flight < stage.replicas:
+            t_need = max(stage.batcher.deadline(), stage.blocked_until)
+            live = (stage._pending_timer is not None
+                    and self.now - 1e-12 <= stage._pending_timer <= t_need + 1e-12)
+            if t_need > self.now and not live:
+                self._push(t_need, "timer", i)
+                stage._pending_timer = t_need
+
+    # ----------------------------------------------------------- queries --
+
+    def queue_depths(self) -> list[int]:
+        return [len(s.batcher) for s in self.stages]
+
+    def utilization(self) -> list[float]:
+        return [s.busy_time / max(s.replica_seconds(self.now), 1e-9)
+                for s in self.stages]
+
+    def summary(self) -> dict:
+        return self.telemetry.summary(
+            self.now,
+            stage_busy=[s.busy_time for s in self.stages],
+            stage_capacity=[s.replica_seconds(self.now)
+                            for s in self.stages])

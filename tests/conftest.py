@@ -4,3 +4,5 @@ import sys
 # tests run on the single real CPU device (the 512-device override is
 # exclusively dryrun.py's)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# make tests/_hyp.py (guarded hypothesis import) importable from test modules
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,7 +1,8 @@
-"""Property-based tests (hypothesis) on the paper's MDP invariants."""
+"""Property-based tests on the paper's MDP invariants — hypothesis when
+installed, the seeded fallback sweep from tests/_hyp.py otherwise."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.cluster import default_pipeline, make_trace, PipelineEnv
 from repro.core.mdp import (Config, QoSWeights, evaluate, feasible,

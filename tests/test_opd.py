@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.cluster import default_pipeline, make_trace, PipelineEnv
 from repro.core import (ExpertPolicy, GreedyPolicy, IPAPolicy, OPDPolicy,
@@ -148,3 +148,14 @@ class TestOPDTraining:
         assert res["decision_time_total"] > 0
         # OPD decision time per step must be far below the 10 s interval
         assert res["decision_times"].mean() < 0.5
+
+    def test_run_episode_resets_decision_times(self):
+        """Reusing one policy object across episodes must not inflate H:
+        each run_episode reports that episode's decisions only."""
+        tr = OPDTrainer(PIPE, make_env, ppo=PPOConfig(epochs=1), seed=0)
+        pol = OPDPolicy(PIPE, tr.params)
+        res1 = run_episode(make_env(1), pol)
+        res2 = run_episode(make_env(2), pol)
+        assert len(res1["decision_times"]) == len(res1["reward"])
+        # without the reset this would be 2x the episode length
+        assert len(res2["decision_times"]) == len(res2["reward"])

@@ -1,0 +1,222 @@
+"""Event-driven runtime: virtual-time determinism, continuous batching,
+arrival-process statistics, percentile math, and the closed control loop."""
+import numpy as np
+import pytest
+
+from repro.cluster import ADAPTATION_INTERVAL, RuntimeEnv
+from repro.cluster.perf_model import make_pipeline
+from repro.configs import ARCHS
+from repro.core.mdp import Config
+from repro.serving import (BurstyArrivals, ContinuousBatcher, PoissonArrivals,
+                           RampArrivals, Request, ServingRuntime,
+                           TraceArrivals, percentile)
+
+
+def two_stage_pipe():
+    return make_pipeline([[ARCHS["whisper-small"]], [ARCHS["llama3.2-1b"]]],
+                         quants=("bf16",))
+
+
+def build_runtime(cfg=Config(z=(0, 0), f=(2, 2), b=(4, 4))):
+    return ServingRuntime.from_pipeline(two_stage_pipe(), cfg=cfg)
+
+
+class TestVirtualTime:
+    def test_deterministic_schedule(self):
+        """Same seed -> identical completion order and timestamps."""
+        runs = []
+        for _ in range(2):
+            rt = build_runtime()
+            rt.load(PoissonArrivals(20, seed=3), 20)
+            rt.drain()
+            runs.append([(r.rid, r.finish) for r in rt.completed])
+        assert runs[0] == runs[1]
+        assert len(runs[0]) > 0
+
+    def test_completions_monotone_and_causal(self):
+        rt = build_runtime()
+        rt.load(PoissonArrivals(15, seed=0), 15)
+        rt.drain()
+        finishes = [r.finish for r in rt.completed]
+        assert finishes == sorted(finishes)
+        for r in rt.completed:
+            assert r.finish > r.arrival          # time flows forward
+            assert len(r.stage_outputs) == 2     # passed through both stages
+        assert rt.in_system == 0
+
+    def test_clock_lands_on_run_until_target(self):
+        rt = build_runtime()
+        rt.load(PoissonArrivals(5, seed=1), 50)
+        rt.run_until(12.5)
+        assert rt.now == pytest.approx(12.5)
+        # no event beyond the horizon was processed
+        assert all(r.finish <= 12.5 for r in rt.completed)
+
+
+class TestContinuousBatcher:
+    def test_full_batch_dispatches_immediately(self):
+        cb = ContinuousBatcher(4, max_wait=10.0)
+        for i in range(4):
+            cb.put(Request(rid=i, tokens=np.arange(4, dtype=np.int32)), now=0.0)
+        assert cb.ready(0.0)
+        assert len(cb.pop(0.0)) == 4
+
+    def test_partial_batch_waits_for_timeout(self):
+        cb = ContinuousBatcher(4, max_wait=0.5)
+        cb.put(Request(rid=0, tokens=np.arange(4, dtype=np.int32)), now=1.0)
+        assert not cb.ready(1.0)
+        assert not cb.ready(1.4)
+        assert cb.deadline() == pytest.approx(1.5)
+        assert cb.ready(1.5)
+        assert len(cb.pop(1.5)) == 1             # actual size, no padding
+
+    def test_runtime_fires_timeout_batches(self):
+        """A lone request must not wait for a full batch: it dispatches at
+        arrival + max_wait via the event loop's timer."""
+        rt = ServingRuntime.from_pipeline(
+            two_stage_pipe(), cfg=Config(z=(0, 0), f=(1, 1), b=(8, 8)),
+            max_wait=0.2)
+        rt.submit(Request(rid=0, tokens=np.arange(32, dtype=np.int32)), at=1.0)
+        rt.drain()
+        assert len(rt.completed) == 1
+        first_batch = rt.telemetry.batches[0]
+        assert first_batch.size == 1
+        assert first_batch.time == pytest.approx(1.2)
+
+
+class TestArrivals:
+    def test_poisson_rate_within_tolerance(self):
+        horizon, rate = 400, 30.0
+        times = PoissonArrivals(rate, seed=0).generate(horizon)
+        assert abs(len(times) / horizon - rate) < 0.1 * rate
+        assert (np.diff(times) >= 0).all()
+        assert times.min() >= 0 and times.max() < horizon
+
+    def test_trace_arrivals_follow_trace(self):
+        trace = np.concatenate([np.full(50, 5.0), np.full(50, 50.0)])
+        times = TraceArrivals(trace, seed=1).generate(100)
+        lo = np.sum(times < 50)
+        hi = np.sum(times >= 50)
+        assert hi > 5 * lo
+
+    def test_ramp_and_bursty_profiles(self):
+        ramp = RampArrivals(5, 50).rates(100)
+        assert ramp[0] == pytest.approx(5) and ramp[-1] == pytest.approx(50)
+        assert (np.diff(ramp) >= 0).all()
+        bursty = BurstyArrivals(10, 80, period=60, burst_len=10).rates(120)
+        assert bursty[5] == pytest.approx(80)    # inside a burst window
+        assert bursty[30] < 15                   # between bursts
+        # deterministic per seed
+        a = BurstyArrivals(10, 80, seed=7).generate(60)
+        b = BurstyArrivals(10, 80, seed=7).generate(60)
+        assert np.array_equal(a, b)
+
+
+class TestPercentiles:
+    def test_linear_interpolation_matches_numpy(self):
+        xs = np.arange(1.0, 101.0)
+        for p in (50, 95, 99):
+            assert percentile(xs, p) == pytest.approx(np.percentile(xs, p))
+        assert percentile(xs, 50) == pytest.approx(50.5)
+        assert percentile(xs, 95) == pytest.approx(95.05)
+        assert percentile(xs, 99) == pytest.approx(99.01)
+
+    def test_edge_cases(self):
+        assert np.isnan(percentile(np.array([]), 95))
+        assert percentile(np.array([3.0]), 99) == 3.0
+
+    def test_telemetry_window_percentiles(self):
+        rt = build_runtime()
+        rt.load(PoissonArrivals(20, seed=2), 20)
+        rt.drain()
+        pcts = rt.telemetry.latency_percentiles()
+        lats = rt.telemetry.latencies()
+        assert pcts["p50"] <= pcts["p95"] <= pcts["p99"]
+        assert pcts["p99"] <= lats.max() + 1e-12
+        assert pcts["p50"] == pytest.approx(np.percentile(lats, 50))
+
+
+class TestClosedLoop:
+    def test_apply_config_mid_run_drops_nothing(self):
+        """Variant switches while requests are queued/in flight: every
+        admitted request still completes, and the switch is charged as
+        virtual cold-start unavailability."""
+        rt = build_runtime(Config(z=(0, 0), f=(2, 2), b=(4, 4)))
+        n = rt.load(PoissonArrivals(25, seed=5), 40)
+        rt.run_until(10.0)
+        rt.apply_config(Config(z=(0, 0), f=(4, 4), b=(8, 8)))  # scale, no switch
+        assert rt.switch_count == 0
+        rt.run_until(20.0)
+        served_before = len(rt.completed)
+        rt.apply_config(Config(z=(0, 0), f=(4, 4), b=(8, 8)))
+        rt.drain()
+        assert rt.switch_count == 0
+        assert len(rt.completed) == n
+        assert rt.in_system == 0
+        assert served_before < n                 # switch happened mid-stream
+
+    def test_variant_switch_pays_cold_start(self):
+        pipe = two_stage_pipe()
+        rt = ServingRuntime.from_pipeline(pipe, cfg=Config(z=(0, 0), f=(1, 1),
+                                                           b=(1, 1)))
+        rt.submit(Request(rid=0, tokens=np.arange(32, dtype=np.int32)), at=0.0)
+        rt.run_until(0.0)
+        rt.apply_config(Config(z=(0, 0), f=(1, 1), b=(1, 1)))
+        assert rt.switch_count == 0              # same variant: free
+        # no alternative variants in this pipe; simulate a switch by forcing
+        # a 2-variant stage instead
+        pipe2 = make_pipeline([[ARCHS["whisper-small"], ARCHS["xlstm-125m"]]],
+                              quants=("bf16",))
+        rt2 = ServingRuntime.from_pipeline(pipe2, cfg=Config(z=(0,), f=(1,),
+                                                             b=(8,)))
+        rt2.submit(Request(rid=0, tokens=np.arange(32, dtype=np.int32)), at=0.0)
+        rt2.run_until(0.0)       # request queued, waiting to fill the batch
+        rt2.apply_config(Config(z=(1,), f=(1,), b=(8,)))
+        assert rt2.switch_count == 1
+        rt2.drain()
+        req = rt2.completed[0]
+        # the queued request waited out the cold start before being served
+        from repro.serving.runtime import COLD_START_SECONDS
+        assert req.finish >= COLD_START_SECONDS
+
+    def test_runtime_env_closed_loop(self):
+        """RuntimeEnv: observation layout matches Eq. (5), rewards are
+        finite, telemetry percentiles appear in info, and reconfiguration
+        mid-run loses no requests."""
+        pipe = make_pipeline(
+            [[ARCHS["whisper-small"], ARCHS["xlstm-125m"]],
+             [ARCHS["llama3.2-1b"]]], quants=("bf16",))
+        env = RuntimeEnv(pipe, PoissonArrivals(15, seed=4), horizon=40)
+        obs = env.reset()
+        assert obs.shape == (pipe.n_tasks * 9,)
+        cfgs = [Config(z=(0, 0), f=(2, 2), b=(4, 4)),
+                Config(z=(1, 0), f=(2, 2), b=(4, 4)),   # variant switch
+                Config(z=(1, 0), f=(3, 3), b=(8, 8)),
+                Config(z=(0, 0), f=(2, 2), b=(4, 4))]   # switch back
+        total_steps = 0
+        for cfg in cfgs:
+            obs, r, done, info = env.step(cfg)
+            total_steps += 1
+            assert np.isfinite(r)
+            assert {"p50", "p95", "p99", "backlog", "queue_depths"} <= set(info)
+        assert done and total_steps == env.n_steps
+        assert env.runtime.switch_count == 2
+        env.drain()
+        assert env.runtime.in_system == 0
+        assert len(env.runtime.completed) == env.submitted
+
+    def test_runtime_env_reset_reproducible(self):
+        pipe = two_stage_pipe()
+        env = RuntimeEnv(pipe, BurstyArrivals(10, 40, seed=9), horizon=30)
+        cfg = Config(z=(0, 0), f=(2, 2), b=(4, 4))
+        rewards = []
+        for _ in range(2):
+            env.reset()
+            rs = []
+            done = False
+            while not done:
+                _, r, done, _ = env.step(cfg)
+                rs.append(r)
+            rewards.append(rs)
+        assert rewards[0] == rewards[1]
+        assert len(rewards[0]) == 30 // ADAPTATION_INTERVAL

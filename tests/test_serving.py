@@ -45,14 +45,21 @@ def test_reconfigure_switches_variant(server):
     assert len(server.completed) - before == 3
 
 
-def test_batcher_pads_tail():
+def test_batcher_dispatches_actual_size():
+    """Tail batches dispatch at their real size — no padded phantom rows."""
     from repro.serving.batcher import Batcher, Request
     b = Batcher(4, 8)
     b.put(Request(rid=0, tokens=np.arange(8, dtype=np.int32)))
     reqs, toks = b.next_batch()
     assert len(reqs) == 1
-    assert toks.shape == (4, 8)
-    assert (toks == np.arange(8)).all()      # padded rows repeat the last req
+    assert toks.shape == (1, 8)              # actual batch, not batch_size
+    assert (toks[0] == np.arange(8)).all()
+    # short prompts zero-pad the sequence dimension only
+    b.put(Request(rid=1, tokens=np.arange(3, dtype=np.int32)))
+    b.put(Request(rid=2, tokens=np.arange(8, dtype=np.int32)))
+    reqs, toks = b.next_batch()
+    assert toks.shape == (2, 8)
+    assert (toks[0, 3:] == 0).all()
 
 
 def test_data_pipeline_learnable_and_deterministic():
