@@ -33,7 +33,8 @@ def trained_opd(episodes: int = 36, *, seed: int = 0, force: bool = False,
                 log=print):
     """Train (or load cached) OPD policy on the paper's three workload
     regimes, round-robin over episodes. Returns (params, trainer_history)."""
-    from repro.cluster import PipelineEnv, default_pipeline, make_trace
+    from repro import api
+    from repro.cluster import PipelineEnv
     from repro.core import OPDTrainer, PPOConfig
 
     if not force and os.path.exists(POLICY_CACHE):
@@ -42,12 +43,12 @@ def trained_opd(episodes: int = 36, *, seed: int = 0, force: bool = False,
         if blob.get("episodes", 0) >= episodes:
             return blob["params"], blob["history"]
 
-    pipe = default_pipeline()
+    pipe = api.get_pipeline("paper-4stage").build()
     kinds = ("steady_low", "fluctuating", "steady_high")
 
     def make_env(seed_):
-        return PipelineEnv(pipe, make_trace(kinds[seed_ % 3], seed=seed_),
-                           seed=seed_)
+        scen = api.get_scenario(kinds[seed_ % 3])
+        return PipelineEnv(pipe, scen.train_trace(seed_), seed=seed_)
 
     tr = OPDTrainer(pipe, make_env, ppo=PPOConfig(expert_freq=4), seed=seed)
     for e in range(1, episodes + 1):

@@ -14,35 +14,38 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import save_results, trained_opd
-from repro.cluster import PipelineEnv, default_pipeline, make_trace
-from repro.core import (GreedyPolicy, IPAPolicy, OPDPolicy, RandomPolicy,
-                        run_episode)
+from repro import api
 
 EVAL_SEED = 77
 
 
-def _episode(pipe, kind, policy):
-    env = PipelineEnv(pipe, make_trace(kind, seed=EVAL_SEED), seed=EVAL_SEED)
-    return run_episode(env, policy)
+def _episode(kind, name, params):
+    """One workload cycle of controller ``name``, declared via repro.api."""
+    exp = api.ExperimentSpec(
+        pipeline=api.get_pipeline("paper-4stage"),
+        scenario=api.replace(api.get_scenario(kind), seed=EVAL_SEED),
+        controller=api.replace(api.get_controller(name), seed=EVAL_SEED),
+        backend="analytic")
+    sess = api.Session.from_spec(exp)
+    if name == "opd":
+        sess.with_params(params)     # shared agent, trained on all regimes
+    return sess.serve()
 
 
 def run(quick: bool = False):
-    pipe = default_pipeline()
     params, _ = trained_opd(episodes=12 if quick else 36)
     rows, payload = [], {}
     for kind in ("steady_low", "fluctuating", "steady_high"):
         res = {}
-        for name, pol in (
-                ("random", RandomPolicy(pipe, seed=EVAL_SEED)),
-                ("greedy", GreedyPolicy(pipe)),
-                ("ipa", IPAPolicy(pipe)),
-                ("opd", OPDPolicy(pipe, params))):
-            ep = _episode(pipe, kind, pol)
-            res[name] = {"cost": float(ep["cost"].mean()),
-                         "qos": float(ep["qos"].mean()),
-                         "cost_std": float(ep["cost"].std()),
-                         "qos_std": float(ep["qos"].std()),
-                         "reward": float(ep["reward"].mean())}
+        for name in ("random", "greedy", "ipa", "opd"):
+            ep = _episode(kind, name, params)
+            cost = np.asarray(ep["cost"])
+            qos = np.asarray(ep["qos"])
+            res[name] = {"cost": float(cost.mean()),
+                         "qos": float(qos.mean()),
+                         "cost_std": float(cost.std()),
+                         "qos_std": float(qos.std()),
+                         "reward": float(np.mean(ep["rewards"]))}
         payload[kind] = res
         g, i, o = res["greedy"], res["ipa"], res["opd"]
         rows += [

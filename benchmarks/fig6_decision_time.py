@@ -7,21 +7,24 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import save_results, trained_opd
+from benchmarks.common import save_results
+from repro.api import PipelineSpec
 from repro.cluster import PipelineEnv, make_trace
-from repro.cluster.perf_model import make_pipeline
-from repro.configs import ARCHS
 from repro.core import IPAPolicy, OPDTrainer, PPOConfig, OPDPolicy, run_episode
 
-# four pipelines of growing decision-space size (stages x variants/stage)
+# four pipeline specs of growing decision-space size (stages x variants/stage)
 PIPELINES = [
-    ("P1-2stage", [["xlstm-125m", "whisper-small"]] * 2, ("bf16",)),
-    ("P2-3stage", [["xlstm-125m", "whisper-small", "llama3.2-1b"]] * 3,
-     ("bf16", "int8")),
-    ("P3-4stage", [["xlstm-125m", "llama3.2-1b", "starcoder2-3b"]] * 4,
-     ("bf16", "int8", "int4")),
-    ("P4-5stage", [["xlstm-125m", "llama3.2-1b", "starcoder2-3b"]] * 5,
-     ("bf16", "int8", "int4")),
+    PipelineSpec("P1-2stage", (("xlstm-125m", "whisper-small"),) * 2,
+                 quants=("bf16",)),
+    PipelineSpec("P2-3stage",
+                 (("xlstm-125m", "whisper-small", "llama3.2-1b"),) * 3,
+                 quants=("bf16", "int8")),
+    PipelineSpec("P3-4stage",
+                 (("xlstm-125m", "llama3.2-1b", "starcoder2-3b"),) * 4,
+                 quants=("bf16", "int8", "int4")),
+    PipelineSpec("P4-5stage",
+                 (("xlstm-125m", "llama3.2-1b", "starcoder2-3b"),) * 5,
+                 quants=("bf16", "int8", "int4")),
 ]
 
 
@@ -30,9 +33,8 @@ def run(quick: bool = False):
     # decision TIME per step is workload-independent; 10-20 decisions give a
     # stable mean while keeping IPA's 9^5-combo enumeration affordable
     steps = 10 if quick else 20
-    for name, stage_archs, quants in PIPELINES:
-        pipe = make_pipeline([[ARCHS[a] for a in st] for st in stage_archs],
-                             name=name, quants=quants)
+    for spec in PIPELINES:
+        name, pipe = spec.name, spec.build()
 
         def make_env(seed):
             tr = make_trace("fluctuating", seed=seed,
@@ -59,8 +61,8 @@ def run(quick: bool = False):
         rows.append(("fig6", f"{name}.opd_faster_pct", round(speedup_pct, 1),
                      "paper: 32.5/53.5/111.6/212.8% growing with complexity"))
     # the headline property: IPA time grows with complexity, OPD stays flat
-    ipas = [payload[n]["ipa_H_s"] for n, *_ in PIPELINES]
-    opds = [payload[n]["opd_H_s"] for n, *_ in PIPELINES]
+    ipas = [payload[s.name]["ipa_H_s"] for s in PIPELINES]
+    opds = [payload[s.name]["opd_H_s"] for s in PIPELINES]
     rows.append(("fig6", "ipa_H_growth_x", round(ipas[-1] / ipas[0], 2),
                  "grows with pipeline complexity"))
     rows.append(("fig6", "opd_H_growth_x", round(opds[-1] / opds[0], 2),

@@ -3,57 +3,47 @@ simulation speed (virtual seconds per wall second), tail latency, and the
 control loop's decision-to-effect latency (wall time from invoking the
 controller to the configuration being live in the runtime; variant switches
 additionally pay COLD_START_SECONDS of virtual unavailability).
+
+Runs are declared through ``repro.api``: the registered "serve3" pipeline ×
+every arrival scenario × the greedy controller, one Session each.
 """
 from __future__ import annotations
-
-import time
 
 import numpy as np
 
 from benchmarks.common import save_results
-from repro.cluster import RuntimeEnv
-from repro.cluster.perf_model import make_pipeline
-from repro.configs import ARCHS
-from repro.core import GreedyPolicy
-from repro.serving import SCENARIOS, make_arrivals
+from repro import api
+from repro.serving import SCENARIOS
 from repro.serving.runtime import COLD_START_SECONDS
-
-
-def _pipe():
-    return make_pipeline(
-        [[ARCHS["xlstm-125m"], ARCHS["whisper-small"]],
-         [ARCHS["llama3.2-1b"], ARCHS["starcoder2-3b"]],
-         [ARCHS["granite-moe-3b-a800m"], ARCHS["zamba2-2.7b"]]],
-        name="runtime3", quants=("bf16",))
 
 
 def run(quick: bool = False):
     horizon = 60 if quick else 180
-    pipe = _pipe()
     rows, payload = [], {}
     for name in SCENARIOS:
-        env = RuntimeEnv(pipe, make_arrivals(name, rate=25.0, seed=11),
-                         horizon=horizon)
-        policy = GreedyPolicy(pipe)
-        done = False
-        effect_ms, switches = [], 0
-        wall0 = time.perf_counter()
-        while not done:
-            t0 = time.perf_counter()
-            cfg = policy(env)                    # decision (wall)
-            decide_s = time.perf_counter() - t0
-            _, _, done, info = env.step(cfg)     # applies, then simulates
-            # decision-to-effect excludes the interval simulation itself
-            effect_ms.append((decide_s + info["apply_wall_s"]) * 1e3)
+        exp = api.ExperimentSpec(
+            pipeline=api.get_pipeline("serve3"),
+            scenario=api.replace(api.get_scenario(name), rate=25.0, seed=11,
+                                 horizon=horizon),
+            controller=api.get_controller("greedy"))
+        apply_wall, switches = [], 0
+
+        def on_step(env, cfg, info):
+            nonlocal switches
+            apply_wall.append(info["apply_wall_s"])
             switches += info["switched"]
-        summary = env.drain()
-        wall = time.perf_counter() - wall0
+
+        sess = api.Session.from_spec(exp)
+        rep = sess.serve(on_step=on_step)
+        summary, wall = rep["summary"], rep["serve_wall_s"]
+        effect_ms = [(d + a) * 1e3
+                     for d, a in zip(rep["decide_wall_s"], apply_wall)]
         res = {
-            "submitted": env.submitted,
+            "submitted": summary["submitted"],
             "served": summary["served"],
             "virtual_rps": summary["throughput_rps"],
             "wall_rps": summary["served"] / max(wall, 1e-9),
-            "sim_speedup_x": env.runtime.now / max(wall, 1e-9),
+            "sim_speedup_x": summary["virtual_now"] / max(wall, 1e-9),
             "p50_ms": summary["p50"] * 1e3,
             "p95_ms": summary["p95"] * 1e3,
             "p99_ms": summary["p99"] * 1e3,
@@ -74,8 +64,8 @@ def run(quick: bool = False):
              round(res["decision_to_effect_ms"], 2),
              "controller invocation -> config live"),
         ]
-        assert summary["served"] == env.submitted, \
-            f"{name}: dropped {env.submitted - summary['served']} requests"
+        assert summary["served"] == summary["submitted"], \
+            f"{name}: dropped {summary['submitted'] - summary['served']} requests"
     save_results("runtime_throughput", payload)
     return rows
 

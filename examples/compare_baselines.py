@@ -1,13 +1,11 @@
 """Compare Random / Greedy / IPA / OPD on one workload cycle (paper Fig. 4-5
-in miniature).
+in miniature), built entirely from ``repro.api`` specs.
 
     PYTHONPATH=src python examples/compare_baselines.py [--workload fluctuating]
 """
 import argparse
 
-from repro.cluster import PipelineEnv, default_pipeline, make_trace
-from repro.core import (GreedyPolicy, IPAPolicy, OPDPolicy, OPDTrainer,
-                        PPOConfig, RandomPolicy, run_episode)
+from repro import api
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--workload", default="fluctuating",
@@ -15,25 +13,20 @@ ap.add_argument("--workload", default="fluctuating",
 ap.add_argument("--episodes", type=int, default=8)
 args = ap.parse_args()
 
-pipe = default_pipeline()
+scenario = api.replace(api.get_scenario(args.workload), seed=42)
 
-
-def make_env(seed):
-    return PipelineEnv(pipe, make_trace(args.workload, seed=seed), seed=seed)
-
-
-trainer = OPDTrainer(pipe, make_env, ppo=PPOConfig(expert_freq=3), seed=0)
-for ep in range(1, args.episodes + 1):
-    trainer.train_episode(ep, env_seed=ep)
-
-print(f"\n{args.workload}: 1200 s cycle, 10 s adaptation interval")
+print(f"\n{args.workload}: {scenario.horizon} s cycle, 10 s adaptation interval")
 print(f"{'policy':8s} {'cost(chips)':>12s} {'QoS':>9s} {'latency(s)':>11s} "
       f"{'decision H(s)':>14s}")
-for name, pol in (("random", RandomPolicy(pipe, seed=7)),
-                  ("greedy", GreedyPolicy(pipe)),
-                  ("ipa", IPAPolicy(pipe)),
-                  ("opd", OPDPolicy(pipe, trainer.params))):
-    res = run_episode(make_env(42), pol)
+for name in ("random", "greedy", "ipa", "opd"):
+    controller = api.replace(api.get_controller(name), seed=7,
+                             train_episodes=args.episodes, expert_freq=3)
+    exp = api.ExperimentSpec(pipeline=api.get_pipeline("paper-4stage"),
+                             scenario=scenario, controller=controller,
+                             backend="analytic")
+    res = api.run_experiment(exp)
+    cost = sum(res["cost"]) / len(res["cost"])
+    qos = sum(res["qos"]) / len(res["qos"])
+    lat = sum(res["latency"]) / len(res["latency"])
     h = res.get("decision_time_total", float("nan"))
-    print(f"{name:8s} {res['cost'].mean():12.2f} {res['qos'].mean():9.2f} "
-          f"{res['latency'].mean():11.3f} {h:14.3f}")
+    print(f"{name:8s} {cost:12.2f} {qos:9.2f} {lat:11.3f} {h:14.3f}")

@@ -1,37 +1,37 @@
-"""Quickstart — the paper's pipeline + OPD agent in ~40 lines.
+"""Quickstart — the paper's pipeline + OPD agent through the declarative
+control-plane API, in ~30 lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--episodes 8]
 
-Builds the 4-stage edge pipeline (stages backed by the assigned
-architectures), trains the OPD agent for a handful of PPO episodes with
-expert guidance, then evaluates it against the Greedy baseline on a
-fluctuating workload cycle.
+Builds the registered 4-stage edge pipeline, trains the OPD agent for a
+handful of PPO episodes with expert guidance, then evaluates it against the
+Greedy baseline on a fluctuating workload cycle. The whole experiment is an
+``ExperimentSpec`` — serialize it with ``json.dumps(exp.to_dict())`` and any
+machine reproduces this run bit-for-bit.
 """
+import argparse
+
 import numpy as np
 
-from repro.cluster import PipelineEnv, default_pipeline, make_trace
-from repro.core import (GreedyPolicy, OPDPolicy, OPDTrainer, PPOConfig,
-                        run_episode)
+from repro import api
 
-pipe = default_pipeline()
+ap = argparse.ArgumentParser()
+ap.add_argument("--episodes", type=int, default=8)
+args = ap.parse_args()
+
+pipe_spec = api.get_pipeline("paper-4stage")
+pipe = pipe_spec.build()
 print(f"pipeline: {pipe.name}, {len(pipe.tasks)} stages, "
       f"{sum(len(t.variants) for t in pipe.tasks)} model variants total")
 
-
-def make_env(seed):
-    return PipelineEnv(pipe, make_trace("fluctuating", seed=seed), seed=seed)
-
-
-trainer = OPDTrainer(pipe, make_env, ppo=PPOConfig(expert_freq=3), seed=0)
-for ep in range(1, 9):
-    trainer.train_episode(ep, env_seed=ep)
-    print(f"episode {ep}: reward={trainer.history['reward'][-1]:9.2f} "
-          f"loss={trainer.history['loss'][-1]:7.3f} "
-          f"expert={trainer.history['expert'][-1]}")
-
-for name, policy in (("greedy", GreedyPolicy(pipe)),
-                     ("opd", OPDPolicy(pipe, trainer.params))):
-    res = run_episode(make_env(99), policy)
-    print(f"{name:6s}: mean cost={res['cost'].mean():7.2f} chips  "
-          f"mean QoS={res['qos'].mean():7.2f}  "
-          f"unmet demand={np.clip(res['excess'], 0, None).mean():6.3f} req/s")
+scenario = api.replace(api.get_scenario("fluctuating"), seed=99)
+for name in ("greedy", "opd"):
+    exp = api.ExperimentSpec(
+        pipeline=pipe_spec, scenario=scenario, backend="analytic",
+        controller=api.replace(api.get_controller(name),
+                               train_episodes=args.episodes, expert_freq=3))
+    res = api.run_experiment(exp, log=print)
+    excess = np.clip(res["excess"], 0, None)
+    print(f"{name:6s}: mean cost={np.mean(res['cost']):7.2f} chips  "
+          f"mean QoS={np.mean(res['qos']):7.2f}  "
+          f"unmet demand={excess.mean():6.3f} req/s")

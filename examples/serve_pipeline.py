@@ -6,106 +6,77 @@ adaptation interval.
     PYTHONPATH=src python examples/serve_pipeline.py \
         [--horizon 120] [--train-episodes 4] [--scenario bursty] [--real]
 
-The agent trains on the analytic simulator (PipelineEnv), then controls the
-real thing: RuntimeEnv steps the virtual-time event loop one 10 s interval
-per decision — continuous batchers (timeout-or-full), per-batch service
-times from the perf model, variant switches paying cold start in virtual
-time. ``--real`` additionally attaches smoke-scale JAX models as stage
-executors so request tokens flow through live forward passes.
+Everything is declared through ``repro.api``: the registered "serve3"
+pipeline, an arrival ScenarioSpec, and an OPD ControllerSpec. The Session
+trains the agent on the analytic simulator (PipelineEnv) over the scenario's
+own rate profile, then controls the real thing: RuntimeEnv steps the
+virtual-time event loop one 10 s interval per decision. ``--real``
+additionally attaches smoke-scale JAX models as stage executors so request
+tokens flow through live forward passes.
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.cluster import PipelineEnv, RuntimeEnv
-from repro.cluster.perf_model import make_pipeline
-from repro.configs import ARCHS
-from repro.core import OPDPolicy, OPDTrainer, PPOConfig
-from repro.serving import SCENARIOS, make_arrivals
-from repro.serving.engine import StageServer
+from repro import api
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--horizon", type=int, default=120,
                 help="virtual seconds of traffic to serve")
 ap.add_argument("--train-episodes", type=int, default=4)
-ap.add_argument("--scenario", default="bursty", choices=SCENARIOS)
+ap.add_argument("--scenario", default="bursty", choices=api.list_scenarios())
 ap.add_argument("--seq-len", type=int, default=32)
 ap.add_argument("--real", action="store_true",
                 help="attach live smoke-scale JAX models as stage executors")
 args = ap.parse_args()
 
-STAGE_ARCHS = [("xlstm-125m", "whisper-small"),
-               ("llama3.2-1b", "starcoder2-3b"),
-               ("granite-moe-3b-a800m", "zamba2-2.7b")]
-
-pipe = make_pipeline([[ARCHS[n] for n in names] for names in STAGE_ARCHS],
-                     name="serve3", quants=("bf16",))
-
-arrivals = make_arrivals(args.scenario, rate=25.0, seed=7)
+exp = api.ExperimentSpec(
+    pipeline=api.get_pipeline("serve3"),
+    scenario=api.replace(api.get_scenario(args.scenario), rate=25.0, seed=7,
+                         horizon=args.horizon),
+    controller=api.replace(api.get_controller("opd"),
+                           train_episodes=args.train_episodes, expert_freq=2),
+    real=args.real, seq_len=args.seq_len)
+sess = api.Session.from_spec(exp)
 
 # --- control plane: OPD agent trained on the matching analytic simulator ---
-# (trained against the scenario's own rate profile so the expert-guided
-# episodes cover the demand levels the runtime will actually see)
-train_trace = arrivals.rates(1200)
-
-def make_env(seed):
-    return PipelineEnv(pipe, np.roll(train_trace, 37 * seed), seed=seed)
-
 t0 = time.time()
-trainer = OPDTrainer(pipe, make_env, ppo=PPOConfig(expert_freq=2), seed=0)
-for ep in range(1, args.train_episodes + 1):
-    trainer.train_episode(ep, env_seed=ep)
-agent = OPDPolicy(pipe, trainer.params)
+sess.train()
 print(f"trained OPD agent for {args.train_episodes} episodes "
       f"in {time.time() - t0:.1f}s")
 
 # --- data plane: the event-driven runtime -----------------------------------
-executors = None
-if args.real:
-    t0 = time.time()
-    servers = [StageServer(f"stage{i}", [ARCHS[n].smoke() for n in names],
-                           seq_len=args.seq_len, seed=i)
-               for i, names in enumerate(STAGE_ARCHS)]
-    executors = [s.execute for s in servers]
-    print(f"built {sum(len(n) for n in STAGE_ARCHS)} live JAX models "
-          f"in {time.time() - t0:.1f}s")
+agent = sess.controller = sess.build_controller()
 
-env = RuntimeEnv(pipe, arrivals, horizon=args.horizon,
-                 executors=executors, seq_len=args.seq_len)
-print(f"loaded {env.submitted} requests over {args.horizon}s "
-      f"({args.scenario} arrivals); serving with OPD in the loop\n")
 
-done = False
-costs = []
-wall0 = time.time()
-while not done:
-    cfg = agent(env)                       # control decision (measured, wall)
-    _, r, done, info = env.step(cfg)       # 10 s of virtual serving
-    costs.append(info["cost"])
-    p95 = info["p95"]
+def show(env, cfg, info):
     print(f"[t={env.runtime.now:5.0f}s] z={cfg.z} f={cfg.f} b={cfg.b} "
           f"demand={info['demand']:5.1f}/s served={info['processed']:4d} "
-          f"p50={info['p50'] * 1e3:6.1f}ms p95={p95 * 1e3:6.1f}ms "
+          f"p50={info['p50'] * 1e3:6.1f}ms p95={info['p95'] * 1e3:6.1f}ms "
           f"p99={info['p99'] * 1e3:6.1f}ms backlog={info['backlog']:4d} "
           f"cost={info['cost']:4.0f} "
           f"decision={agent.decision_times[-1] * 1e3:5.1f}ms"
           + (" [switch]" if info["switched"] else ""))
 
-summary = env.drain()                      # finish in-flight work
+
+wall0 = time.time()
+report = sess.serve(on_step=show)
 wall = time.time() - wall0
-rt = env.runtime
-print(f"\nserved {summary['served']}/{env.submitted} requests "
+
+summary = report["summary"]
+submitted = summary["submitted"]
+print(f"\nserved {summary['served']}/{submitted} requests "
       f"({summary['throughput_rps']:.1f} req/s virtual, "
       f"{summary['served'] / max(wall, 1e-9):.0f} req/s wall)")
 print(f"latency p50={summary['p50'] * 1e3:.1f}ms "
       f"p95={summary['p95'] * 1e3:.1f}ms p99={summary['p99'] * 1e3:.1f}ms "
       f"mean={summary['latency_mean_s'] * 1e3:.1f}ms")
-print(f"mean cost={np.mean(costs):.1f} chips, "
-      f"{rt.switch_count} live variant switches, "
+print(f"mean cost={np.mean(report['cost']):.1f} chips, "
+      f"{summary['switches']} live variant switches, "
       f"mean batch={summary['mean_batch_size']:.1f}, "
-      f"decision H={sum(agent.decision_times):.3f}s over "
-      f"{len(agent.decision_times)} decisions")
-print(f"stage utilization: "
-      + " ".join(f"{u:.2f}" for u in rt.utilization()))
-assert summary["served"] == env.submitted, "every request must complete"
+      f"decision H={report['decision_time_total']:.3f}s over "
+      f"{len(report['decision_times'])} decisions")
+print("stage utilization: "
+      + " ".join(f"{u:.2f}" for u in summary["utilization"]))
+assert summary["served"] == submitted, "every request must complete"

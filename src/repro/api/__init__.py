@@ -1,0 +1,17 @@
+"""repro.api — the declarative control-plane API.
+
+Specs (`PipelineSpec`, `ScenarioSpec`, `ControllerSpec`, `ExperimentSpec`)
+describe an experiment as JSON-serializable data; registries name the
+built-ins (`get_pipeline("paper-4stage")`, `get_scenario("bursty")`,
+`get_controller("opd")`); the `Session` facade owns the env / runtime /
+predictor / policy lifecycle. See docs/API.md for the schema and quickstart.
+"""
+from repro.api.specs import (ControllerSpec, ExperimentSpec, PipelineSpec,
+                             ScenarioSpec, replace)
+from repro.api.registry import (register_pipeline, register_scenario,
+                                register_controller, get_pipeline,
+                                get_scenario, get_controller,
+                                controller_factory, list_pipelines,
+                                list_scenarios, list_controllers)
+from repro.api.session import Session, build_executors, run_experiment
+from repro.core.controller import Controller, ControllerBase, Observation, decide

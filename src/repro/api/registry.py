@@ -1,0 +1,143 @@
+"""Named registries for pipelines, scenarios and controllers.
+
+Registering makes a spec discoverable by name (``get_* `` / ``list_*``), so
+entry points build everything as data instead of copy-pasted wiring:
+
+    exp = ExperimentSpec(pipeline=get_pipeline("serve2"),
+                         scenario=get_scenario("bursty"),
+                         controller=get_controller("opd"))
+
+Controllers additionally register a *factory* ``(spec, pipe, params) ->
+controller instance`` used by the Session when serving starts; ``params`` is
+the trained policy state for learned controllers (None otherwise).
+"""
+from __future__ import annotations
+
+from repro.cluster.workloads import WORKLOADS
+from repro.serving.arrivals import SCENARIOS
+
+from repro.api.specs import ControllerSpec, PipelineSpec, ScenarioSpec
+
+_PIPELINES: dict[str, PipelineSpec] = {}
+_SCENARIOS: dict[str, ScenarioSpec] = {}
+_CONTROLLERS: dict[str, tuple[ControllerSpec, object]] = {}
+
+
+# ---------------------------------------------------------------- pipelines --
+
+def register_pipeline(spec: PipelineSpec, *, name: str | None = None) -> PipelineSpec:
+    _PIPELINES[name or spec.name] = spec
+    return spec
+
+
+def get_pipeline(name: str) -> PipelineSpec:
+    try:
+        return _PIPELINES[name]
+    except KeyError:
+        raise KeyError(f"unknown pipeline {name!r}; "
+                       f"registered: {list_pipelines()}") from None
+
+
+def list_pipelines() -> tuple[str, ...]:
+    return tuple(sorted(_PIPELINES))
+
+
+# ---------------------------------------------------------------- scenarios --
+
+def register_scenario(name: str, spec: ScenarioSpec) -> ScenarioSpec:
+    _SCENARIOS[name] = spec
+    return spec
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return _SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"registered: {list_scenarios()}") from None
+
+
+def list_scenarios() -> tuple[str, ...]:
+    return tuple(sorted(_SCENARIOS))
+
+
+# -------------------------------------------------------------- controllers --
+
+def register_controller(name: str, factory, *,
+                        spec: ControllerSpec | None = None) -> None:
+    """``factory(spec, pipe, params) -> controller``; ``spec`` is the default
+    ControllerSpec handed out by ``get_controller(name)``."""
+    _CONTROLLERS[name] = (spec or ControllerSpec(name=name), factory)
+
+
+def get_controller(name: str) -> ControllerSpec:
+    try:
+        return _CONTROLLERS[name][0]
+    except KeyError:
+        raise KeyError(f"unknown controller {name!r}; "
+                       f"registered: {list_controllers()}") from None
+
+
+def controller_factory(name: str):
+    return _CONTROLLERS[name][1]
+
+
+def list_controllers() -> tuple[str, ...]:
+    return tuple(sorted(_CONTROLLERS))
+
+
+# ---------------------------------------------------------------- built-ins --
+
+def _register_builtin_pipelines():
+    # the paper's 4-stage pipeline (perf_model.default_pipeline as data)
+    register_pipeline(PipelineSpec(
+        name="paper-4stage",
+        stages=(("whisper-small", "xlstm-125m"),
+                ("llama3.2-1b", "starcoder2-3b"),
+                ("granite-moe-3b-a800m", "zamba2-2.7b"),
+                ("granite-3-8b", "llava-next-mistral-7b"))))
+    # the launcher's 2-stage serving pipeline
+    register_pipeline(PipelineSpec(
+        name="serve2",
+        stages=(("whisper-small", "xlstm-125m"),
+                ("llama3.2-1b", "starcoder2-3b")),
+        quants=("bf16",)))
+    # the closed-loop demo / runtime-benchmark 3-stage pipeline
+    register_pipeline(PipelineSpec(
+        name="serve3",
+        stages=(("xlstm-125m", "whisper-small"),
+                ("llama3.2-1b", "starcoder2-3b"),
+                ("granite-moe-3b-a800m", "zamba2-2.7b")),
+        quants=("bf16",)))
+
+
+def _register_builtin_scenarios():
+    for kind in SCENARIOS:          # event-driven arrival processes
+        register_scenario(kind, ScenarioSpec(kind=kind, rate=25.0, seed=0,
+                                             horizon=120))
+    for kind in WORKLOADS:          # the paper's Fig. 4 workload regimes
+        register_scenario(kind, ScenarioSpec(kind=kind, rate=120.0, seed=0,
+                                             horizon=1200))
+
+
+def _register_builtin_controllers():
+    from repro.core.baselines import GreedyPolicy, IPAPolicy, RandomPolicy
+    from repro.core.expert import ExpertPolicy
+    from repro.core.opd import OPDPolicy
+
+    register_controller(
+        "opd", lambda spec, pipe, params: OPDPolicy(
+            pipe, params, greedy=spec.greedy, seed=spec.seed),
+        spec=ControllerSpec(name="opd", train_episodes=4))
+    register_controller("greedy", lambda spec, pipe, params: GreedyPolicy(pipe))
+    register_controller(
+        "ipa", lambda spec, pipe, params: IPAPolicy(pipe))
+    register_controller(
+        "random", lambda spec, pipe, params: RandomPolicy(pipe, seed=spec.seed))
+    register_controller(
+        "expert", lambda spec, pipe, params: ExpertPolicy(pipe))
+
+
+_register_builtin_pipelines()
+_register_builtin_scenarios()
+_register_builtin_controllers()

@@ -1,0 +1,196 @@
+"""The Session facade — owns the env / runtime / predictor / policy
+lifecycle that entry points used to wire by hand:
+
+    sess = Session.from_spec(exp)     # ExperimentSpec, dict, or JSON str
+    sess.train(log=print)             # PPO episodes (no-op for baselines)
+    sess.serve(on_step=...)           # run the control loop over the horizon
+    sess.report()                     # JSON-safe results incl. the spec
+
+Every random draw (arrival stream, request tokens, policy sampling, PPO
+training) derives from the spec's seeds, so serializing a spec to JSON and
+reloading it reproduces the run bit-for-bit.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.cluster.env import PipelineEnv, RuntimeEnv
+from repro.core.controller import decide
+from repro.core.ppo import OPDTrainer, PPOConfig
+
+from repro.api.registry import controller_factory
+from repro.api.specs import ExperimentSpec
+
+# per-step scalar keys copied into the report (runtime adds percentiles etc.)
+_STEP_KEYS = ("qos", "cost", "latency", "throughput", "excess", "demand")
+_TRAINABLE = ("opd",)
+
+
+def build_executors(spec: ExperimentSpec):
+    """Live smoke-scale JAX models as stage executors for ``real`` runs."""
+    from repro.configs import ARCHS
+    from repro.serving.engine import StageServer
+    servers = [StageServer(f"stage{i}", [ARCHS[n].smoke() for n in names],
+                           seq_len=spec.seq_len, seed=i)
+               for i, names in enumerate(spec.pipeline.stages)]
+    return [s.execute for s in servers]
+
+
+class Session:
+    def __init__(self, spec: ExperimentSpec):
+        self.spec = spec
+        self.pipe = spec.pipeline.build()
+        self.trainer: OPDTrainer | None = None
+        self.controller = None
+        self._params = None
+        self._report: dict | None = None
+
+    # ------------------------------------------------------------ creation --
+
+    @classmethod
+    def from_spec(cls, spec: ExperimentSpec | dict | str) -> "Session":
+        if isinstance(spec, str):
+            spec = json.loads(spec)
+        if isinstance(spec, dict):
+            spec = ExperimentSpec.from_dict(spec)
+        return cls(spec)
+
+    # ------------------------------------------------------------ training --
+
+    @property
+    def trainable(self) -> bool:
+        return self.spec.controller.name in _TRAINABLE
+
+    def train(self, episodes: int | None = None, *, log=None) -> "Session":
+        """Run PPO training for learned controllers; no-op for baselines.
+        Training envs are analytic (cheap) and fully seeded from the spec."""
+        c, scen = self.spec.controller, self.spec.scenario
+        episodes = c.train_episodes if episodes is None else episodes
+        if not self.trainable or episodes <= 0:
+            return self
+
+        def make_env(seed):
+            return PipelineEnv(self.pipe,
+                               scen.train_trace(seed, seconds=c.train_seconds),
+                               seed=seed)
+
+        if self.trainer is None:
+            self.trainer = OPDTrainer(
+                self.pipe, make_env,
+                ppo=PPOConfig(expert_freq=c.expert_freq), seed=c.seed)
+        for ep in range(1, episodes + 1):
+            self.trainer.train_episode(ep, env_seed=ep)
+            if log:
+                h = self.trainer.history
+                log(f"episode {ep}: reward={h['reward'][-1]:9.2f} "
+                    f"loss={h['loss'][-1]:7.3f} expert={h['expert'][-1]}")
+        self.controller = None          # params changed -> rebuild on serve
+        return self
+
+    # ------------------------------------------------------------- serving --
+
+    def build_env(self):
+        spec, scen = self.spec, self.spec.scenario
+        if spec.backend == "analytic":
+            return PipelineEnv(self.pipe, scen.eval_trace(), seed=scen.seed)
+        if spec.backend == "runtime":
+            executors = build_executors(spec) if spec.real else None
+            return RuntimeEnv(self.pipe, scen.build_arrivals(),
+                              horizon=scen.horizon, executors=executors,
+                              seq_len=spec.seq_len)
+        raise ValueError(f"unknown backend {spec.backend!r}")
+
+    def with_params(self, params) -> "Session":
+        """Attach pre-trained policy params (skips in-session training) —
+        lets callers share one trained agent across many sessions."""
+        self._params = params
+        self.controller = None
+        return self
+
+    def build_controller(self):
+        c = self.spec.controller
+        params = self._params
+        if self.trainable and params is None:
+            if self.trainer is None:
+                self.train()
+            if self.trainer is None:
+                raise RuntimeError(
+                    f"controller {c.name!r} needs training; set "
+                    f"train_episodes > 0 or call session.train(episodes)")
+            params = self.trainer.params
+        return controller_factory(c.name)(c, self.pipe, params)
+
+    def serve(self, *, on_step=None) -> dict:
+        """Run the control loop over the scenario horizon. ``on_step(env,
+        cfg, info)`` is called after each adaptation interval."""
+        env = self.build_env()
+        if self.controller is None:
+            self.controller = self.build_controller()
+        controller = self.controller
+        if hasattr(controller, "warmup"):
+            # jit compile happens outside the timed loop, so decide_wall_s
+            # and decision_times agree from the first decision on
+            controller.warmup(env.observe())
+        if hasattr(controller, "decision_times"):
+            controller.decision_times = []
+        # build_env() returns a freshly reset env — no second reset needed
+        steps: dict[str, list] = {k: [] for k in _STEP_KEYS}
+        rewards, configs, decide_walls = [], [], []
+        wall0 = time.perf_counter()
+        done = False
+        while not done:
+            t0 = time.perf_counter()
+            cfg = decide(controller, env)
+            decide_walls.append(time.perf_counter() - t0)
+            _, r, done, info = env.step(cfg)
+            rewards.append(float(r))
+            configs.append([list(cfg.z), list(cfg.f), list(cfg.b)])
+            for k in _STEP_KEYS:
+                steps[k].append(float(info[k]))
+            if on_step:
+                on_step(env, cfg, info)
+        summary = env.drain() if hasattr(env, "drain") else {}
+        if hasattr(env, "runtime"):
+            summary["submitted"] = env.submitted
+            summary["switches"] = env.runtime.switch_count
+            summary["utilization"] = env.runtime.utilization()
+            summary["virtual_now"] = env.runtime.now
+        self._report = {
+            "experiment": self.spec.to_dict(),
+            # params injected via with_params() are not derivable from the
+            # spec — flag it so nobody mistakes this report for spec-reproducible
+            "external_params": self._params is not None,
+            "rewards": rewards,
+            "configs": configs,
+            "decide_wall_s": decide_walls,
+            "serve_wall_s": time.perf_counter() - wall0,
+            "summary": {k: (v.tolist() if isinstance(v, np.ndarray) else v)
+                        for k, v in summary.items()},
+            **{k: v for k, v in steps.items()},
+        }
+        if hasattr(controller, "decision_times"):
+            self._report["decision_times"] = list(controller.decision_times)
+            self._report["decision_time_total"] = float(
+                np.sum(controller.decision_times))
+        return self._report
+
+    # -------------------------------------------------------------- report --
+
+    def report(self) -> dict:
+        """JSON-safe results of the last serve (run on demand if it has not
+        happened yet; serve trains lazily when the controller needs it)."""
+        if self._report is None:
+            self.serve()
+        return self._report
+
+
+def run_experiment(spec: ExperimentSpec | dict | str, *, log=None,
+                   on_step=None) -> dict:
+    """One-shot convenience: Session.from_spec -> train -> serve -> report."""
+    sess = Session.from_spec(spec)
+    sess.train(log=log)
+    sess.serve(on_step=on_step)
+    return sess.report()

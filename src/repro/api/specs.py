@@ -1,0 +1,148 @@
+"""Declarative experiment specs — plain frozen dataclasses, JSON-round-trip
+safe, so an experiment is a reproducible artifact: ``Spec.from_dict(
+spec.to_dict())`` equals the original, and running the reloaded spec
+reproduces the run bit-for-bit (every random draw derives from spec seeds).
+
+  PipelineSpec    stages × archs × quants × knob ranges  -> core Pipeline
+  ScenarioSpec    arrival process + rate + seed + horizon -> ArrivalProcess
+  ControllerSpec  which controller, its seed / training budget
+  ExperimentSpec  the full run: pipeline + scenario + controller + backend
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, replace  # noqa: F401 (replace re-exported)
+
+import numpy as np
+
+from repro.cluster.workloads import WORKLOADS, make_trace
+from repro.core.mdp import Pipeline
+from repro.serving.arrivals import ArrivalProcess, TraceArrivals, make_arrivals
+
+DEFAULT_QUANTS = ("bf16", "int8", "int4")
+
+
+@dataclass(frozen=True)
+class PipelineSpec:
+    """Stages × architectures × quantisation levels plus knob ranges —
+    everything ``perf_model.make_pipeline`` needs, as data."""
+    name: str
+    stages: tuple[tuple[str, ...], ...]      # arch names per stage
+    quants: tuple[str, ...] = DEFAULT_QUANTS
+    f_max: int = 8
+    b_max: int = 32
+    w_max: float = 64.0
+
+    def build(self) -> Pipeline:
+        from repro.cluster.perf_model import make_pipeline
+        from repro.configs import ARCHS
+        return make_pipeline([[ARCHS[n] for n in names] for names in self.stages],
+                             name=self.name, quants=self.quants,
+                             f_max=self.f_max, b_max=self.b_max,
+                             w_max=self.w_max)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PipelineSpec":
+        return cls(name=d["name"],
+                   stages=tuple(tuple(s) for s in d["stages"]),
+                   quants=tuple(d.get("quants", DEFAULT_QUANTS)),
+                   f_max=int(d.get("f_max", 8)), b_max=int(d.get("b_max", 32)),
+                   w_max=float(d.get("w_max", 64.0)))
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """A workload: arrival kind (any of serving ``SCENARIOS`` or a paper
+    workload regime from ``WORKLOADS``), its rate scale, seed and horizon.
+    For workload regimes ``rate`` is the trace's peak (paper default 120)."""
+    kind: str = "bursty"
+    rate: float = 25.0
+    seed: int = 0
+    horizon: int = 120
+
+    def build_arrivals(self) -> ArrivalProcess:
+        if self.kind in WORKLOADS:
+            return TraceArrivals(make_trace(self.kind, seed=self.seed,
+                                            peak=self.rate), seed=self.seed)
+        return make_arrivals(self.kind, rate=self.rate, seed=self.seed)
+
+    def eval_trace(self) -> np.ndarray:
+        """Per-second rate profile over the horizon — the analytic
+        backend's workload trace."""
+        if self.kind in WORKLOADS:
+            return make_trace(self.kind, seed=self.seed, peak=self.rate,
+                              seconds=self.horizon)
+        return self.build_arrivals().rates(self.horizon)
+
+    def train_trace(self, episode: int, *, seconds: int = 1200) -> np.ndarray:
+        """Training trace for PPO episode ``episode`` — covers the demand
+        levels the scenario will serve, decorrelated across episodes."""
+        if self.kind in WORKLOADS:
+            return make_trace(self.kind, seed=episode, peak=self.rate,
+                              seconds=seconds)
+        base = self.build_arrivals().rates(seconds)
+        return np.roll(base, 37 * episode)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScenarioSpec":
+        return cls(kind=d["kind"], rate=float(d.get("rate", 25.0)),
+                   seed=int(d.get("seed", 0)),
+                   horizon=int(d.get("horizon", 120)))
+
+
+@dataclass(frozen=True)
+class ControllerSpec:
+    """Which controller runs the loop, and every knob that affects its
+    decisions: RNG seed, OPD decode mode and PPO training budget."""
+    name: str = "greedy"
+    seed: int = 0
+    greedy: bool = True          # OPD decode mode (argmax vs sample)
+    train_episodes: int = 0      # PPO episodes before serving (OPD only)
+    train_seconds: int = 1200    # length of each training trace
+    expert_freq: int = 2         # Alg. 2 expert-guided episode frequency
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ControllerSpec":
+        return cls(name=d["name"], seed=int(d.get("seed", 0)),
+                   greedy=bool(d.get("greedy", True)),
+                   train_episodes=int(d.get("train_episodes", 0)),
+                   train_seconds=int(d.get("train_seconds", 1200)),
+                   expert_freq=int(d.get("expert_freq", 2)))
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """One full run. ``backend`` selects the simulator: "runtime" steps the
+    event-driven ServingRuntime (measured telemetry), "analytic" steps the
+    closed-form PipelineEnv (cheap, used for training). ``real`` attaches
+    live smoke-scale JAX models as stage executors (runtime backend only)."""
+    pipeline: PipelineSpec
+    scenario: ScenarioSpec
+    controller: ControllerSpec
+    backend: str = "runtime"     # "runtime" | "analytic"
+    real: bool = False
+    seq_len: int = 32
+
+    def to_dict(self) -> dict:
+        return {"pipeline": self.pipeline.to_dict(),
+                "scenario": self.scenario.to_dict(),
+                "controller": self.controller.to_dict(),
+                "backend": self.backend, "real": self.real,
+                "seq_len": self.seq_len}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        return cls(pipeline=PipelineSpec.from_dict(d["pipeline"]),
+                   scenario=ScenarioSpec.from_dict(d["scenario"]),
+                   controller=ControllerSpec.from_dict(d["controller"]),
+                   backend=d.get("backend", "runtime"),
+                   real=bool(d.get("real", False)),
+                   seq_len=int(d.get("seq_len", 32)))

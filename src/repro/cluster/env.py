@@ -22,6 +22,7 @@ import time
 import numpy as np
 
 from repro.cluster.monitor import Monitor
+from repro.core.controller import Observation
 from repro.core.mdp import (Config, Pipeline, QoSWeights, accuracy_and_cost,
                             evaluate, resource_usage, score_measurements,
                             stage_latency)
@@ -43,11 +44,12 @@ class _ConfigEnvBase:
         # per task: (u, p, m, l, t, z, f, b, c)  — Eq. (5)
         return self.pipe.n_tasks * 9
 
-    def _observe(self) -> np.ndarray:
+    def _observe(self, cur: float | None = None,
+                 pred: float | None = None) -> np.ndarray:
         pipe, cfg = self.pipe, self.cfg
         u = (pipe.w_max - resource_usage(pipe, cfg)) / pipe.w_max
-        p = self._current_load() / 100.0
-        m = self._predicted_load() / 100.0
+        p = (self._current_load() if cur is None else cur) / 100.0
+        m = (self._predicted_load() if pred is None else pred) / 100.0
         rows = []
         for n, task in enumerate(pipe.tasks):
             var = task.variants[cfg.z[n]]
@@ -69,6 +71,13 @@ class _ConfigEnvBase:
         if self.predictor is not None:
             return float(self.predictor(self.monitor.load_history()))
         return self._current_load()
+
+    def observe(self) -> Observation:
+        """Public decision-time snapshot for the Controller protocol."""
+        cur = float(self._current_load())
+        pred = float(self._predicted_load())   # one predictor call per obs
+        return Observation(state=self._observe(cur, pred), config=self.cfg,
+                           current_load=cur, predicted_load=pred)
 
     def default_config(self) -> Config:
         N = self.pipe.n_tasks

@@ -13,3 +13,4 @@ from repro.core.ppo import PPOConfig, OPDTrainer, compute_gae
 from repro.core.expert import ExpertPolicy
 from repro.core.baselines import RandomPolicy, GreedyPolicy, IPAPolicy
 from repro.core.opd import OPDPolicy, run_episode
+from repro.core.controller import Observation, ControllerBase, decide

@@ -1,8 +1,10 @@
 """Baseline configuration policies (paper §VI-A): Random, Greedy, IPA.
 
-Each baseline is a callable ``(env) -> Config`` deciding from the env's
-observable information (predicted load, pipeline spec) — the same interface
-the OPD agent uses.
+Each baseline implements the Controller protocol ``decide(obs) -> Config``,
+deciding from the public :class:`~repro.core.controller.Observation`
+(predicted load, live config) and the pipeline spec — the same interface the
+OPD agent uses. Legacy ``policy(env)`` call sites keep working through the
+``ControllerBase`` shim.
 """
 from __future__ import annotations
 
@@ -11,18 +13,19 @@ import time
 
 import numpy as np
 
+from repro.core.controller import ControllerBase, Observation
 from repro.core.mdp import (Config, Pipeline, QoSWeights, feasible,
                             pipeline_metrics, qos, resource_usage)
 
 
-class RandomPolicy:
+class RandomPolicy(ControllerBase):
     """Uniformly random feasible configuration."""
 
     def __init__(self, pipe: Pipeline, seed: int = 0):
         self.pipe = pipe
         self.rng = np.random.default_rng(seed)
 
-    def __call__(self, env) -> Config:
+    def decide(self, obs: Observation) -> Config:
         pipe = self.pipe
         bc = pipe.batch_choices()
         for _ in range(64):
@@ -38,16 +41,16 @@ class RandomPolicy:
                       b=tuple(1 for _ in pipe.tasks))
 
 
-class GreedyPolicy:
+class GreedyPolicy(ControllerBase):
     """Minimise cost while adhering to resource constraints: cheapest variant
     per stage, minimal replicas/batch to cover the predicted demand."""
 
     def __init__(self, pipe: Pipeline):
         self.pipe = pipe
 
-    def __call__(self, env) -> Config:
+    def decide(self, obs: Observation) -> Config:
         pipe = self.pipe
-        demand = env._predicted_load()
+        demand = obs.predicted_load
         bc = pipe.batch_choices()
         z, f, b = [], [], []
         budget = pipe.w_max
@@ -77,7 +80,7 @@ class GreedyPolicy:
         return Config(z=tuple(z), f=tuple(f), b=tuple(b))
 
 
-class IPAPolicy:
+class IPAPolicy(ControllerBase):
     """IPA-style solver [Ghafouri et al.]: enumerate variant combinations
     across stages (product space — decision time grows with pipeline
     complexity), solving replicas/batch per stage to meet demand; maximise
@@ -108,10 +111,10 @@ class IPAPolicy:
                         best = (lat, fi, bi)
         return None if best is None else (best[1], best[2])
 
-    def __call__(self, env) -> Config:
+    def decide(self, obs: Observation) -> Config:
         t0 = time.perf_counter()
         pipe = self.pipe
-        demand = env._predicted_load()
+        demand = obs.predicted_load
         best_cfg, best_score = None, -np.inf
         variant_ranges = [range(len(t.variants)) for t in pipe.tasks]
         for zs in itertools.product(*variant_ranges):
@@ -139,5 +142,5 @@ class IPAPolicy:
                 best_cfg, best_score = cfg, score
         self.decision_times.append(time.perf_counter() - t0)
         if best_cfg is None:
-            return GreedyPolicy(pipe)(env)
+            return GreedyPolicy(pipe).decide(obs)
         return best_cfg

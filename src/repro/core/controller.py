@@ -1,0 +1,56 @@
+"""Public controller-facing interface.
+
+A controller is anything implementing ``decide(obs: Observation) -> Config``.
+``Observation`` is the *public* snapshot an environment hands the controller
+each adaptation interval — the Eq. (5) state vector plus the live config and
+the monitor's current/predicted load — so policies no longer reach into
+``env._observe()`` / ``env._predicted_load()`` private APIs.
+
+``ControllerBase`` keeps the legacy ``policy(env)`` call style working as a
+back-compat shim (it builds the Observation via ``env.observe()``), and the
+module-level ``decide(controller, env)`` helper lets drivers accept both new
+protocol objects and bare ``(env) -> Config`` callables.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.mdp import Config
+
+
+@dataclass(frozen=True, eq=False)
+class Observation:
+    """What a controller may observe at decision time (public API)."""
+    state: np.ndarray        # Eq. (5) feature vector, [n_tasks * 9]
+    config: Config           # configuration currently live
+    current_load: float      # newest monitored arrival rate (req/s)
+    predicted_load: float    # predictor's load estimate for the next interval
+
+
+@runtime_checkable
+class Controller(Protocol):
+    """Anything deciding a Config from a public Observation."""
+
+    def decide(self, obs: Observation) -> Config: ...
+
+
+class ControllerBase:
+    """Base for controllers: implement ``decide``; ``__call__(env)`` is the
+    back-compat shim for legacy ``policy(env)`` call sites."""
+
+    def decide(self, obs: Observation) -> Config:
+        raise NotImplementedError
+
+    def __call__(self, env) -> Config:
+        return self.decide(env.observe())
+
+
+def decide(controller, env) -> Config:
+    """Invoke ``controller`` on ``env``: prefer the Observation protocol,
+    fall back to the legacy ``(env) -> Config`` callable style."""
+    if hasattr(controller, "decide"):
+        return controller.decide(env.observe())
+    return controller(env)

@@ -13,10 +13,11 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.controller import ControllerBase, Observation
 from repro.core.mdp import Config, Pipeline, QoSWeights, feasible, reward
 
 
-class ExpertPolicy:
+class ExpertPolicy(ControllerBase):
     def __init__(self, pipe: Pipeline, weights: QoSWeights | None = None,
                  sweeps: int = 3):
         self.pipe = pipe
@@ -83,10 +84,11 @@ class ExpertPolicy:
                 break
         return cfg, best_r
 
-    def __call__(self, env) -> Config:
+    def decide(self, obs: Observation) -> Config:
         pipe = self.pipe
-        demand = env._predicted_load()
-        warm = env.cfg if feasible(pipe, env.cfg) else self._min_cost_start()
+        demand = obs.predicted_load
+        warm = (obs.config if feasible(pipe, obs.config)
+                else self._min_cost_start())
         best_cfg, best_r = None, -np.inf
         for start in (warm, self._min_cost_start(),
                       self._capacity_start(demand)):

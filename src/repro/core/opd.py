@@ -10,12 +10,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.controller import ControllerBase, Observation
+from repro.core.controller import decide as _decide
 from repro.core.mdp import Config, Pipeline
 from repro.core.policy import action_to_config, sample_action
 
 
-class OPDPolicy:
-    """Deployable policy wrapper: (env) -> Config, measuring decision time."""
+class OPDPolicy(ControllerBase):
+    """Deployable policy wrapper implementing the Controller protocol:
+    ``decide(obs) -> Config``, measuring steady-state decision time."""
 
     def __init__(self, pipe: Pipeline, params, *, greedy: bool = True, seed: int = 0):
         self.pipe = pipe
@@ -26,11 +29,22 @@ class OPDPolicy:
         # warm the jit cache so measured decision time is steady-state
         self._warm = False
 
-    def __call__(self, env) -> Config:
-        s = jnp.asarray(env._observe())
-        if not self._warm:
-            sample_action(self.params, s, self.key, greedy=self.greedy)
-            self._warm = True
+    def warmup(self, obs: Observation) -> None:
+        """Burn the jit warmup forward pass on its own throwaway subkey —
+        never timed, never reused, so the first real decision's randomness
+        is independent of the warmup. Idempotent; ``decide`` calls it
+        lazily, so the key evolution is identical either way."""
+        if self._warm:
+            return
+        self.key, warm_key = jax.random.split(self.key)
+        a_w, _, _ = sample_action(self.params, jnp.asarray(obs.state),
+                                  warm_key, greedy=self.greedy)
+        jax.block_until_ready(a_w)
+        self._warm = True
+
+    def decide(self, obs: Observation) -> Config:
+        s = jnp.asarray(obs.state)
+        self.warmup(obs)
         t0 = time.perf_counter()
         self.key, sub = jax.random.split(self.key)
         a, _, _ = sample_action(self.params, s, sub, greedy=self.greedy)
@@ -40,9 +54,10 @@ class OPDPolicy:
 
 
 def run_episode(env, policy) -> dict:
-    """Run one workload cycle under ``policy`` (any (env)->Config callable).
-    Returns per-step arrays: reward, qos, cost, latency, throughput, excess,
-    and cumulative decision time H (if the policy records it)."""
+    """Run one workload cycle under ``policy`` (a Controller or any legacy
+    (env)->Config callable). Returns per-step arrays: reward, qos, cost,
+    latency, throughput, excess, and cumulative decision time H (if the
+    policy records it)."""
     env.reset()
     if hasattr(policy, "decision_times"):
         # H must cover THIS episode only — a reused policy object would
@@ -52,7 +67,7 @@ def run_episode(env, policy) -> dict:
                            "excess", "demand")}
     done = False
     while not done:
-        cfg = policy(env)
+        cfg = _decide(policy, env)
         _, r, done, info = env.step(cfg)
         out["reward"].append(r)
         for k in ("qos", "cost", "latency", "throughput", "excess", "demand"):

@@ -104,7 +104,7 @@ class OPDTrainer:
             s_j = jnp.asarray(s)
             self.key, sub = jax.random.split(self.key)
             if use_expert:
-                cfg = self.expert(env)
+                cfg = self.expert.decide(env.observe())
                 a = config_to_action(self.pipe, cfg)
                 logp, _, v = log_prob_entropy(
                     self.params, s_j[None], jnp.asarray(a)[None])

@@ -5,15 +5,15 @@ data plane the OPD controller manages — plus the event-driven pipeline mode.
         [--batch 4] [--context 128] [--tokens 32]
 
     PYTHONPATH=src python -m repro.launch.serve --pipeline \
-        [--scenario bursty] [--horizon 120]
+        [--scenario bursty] [--horizon 120] [--policy greedy] [--seed 3]
 
 Single-arch mode runs prefill once to populate the cache, then streams
 decode steps; on TPU the same serve_step is what launch/dryrun.py compiles
 for the decode_32k / long_500k shapes of the production mesh. ``--pipeline``
-instead drives the virtual-time serving runtime (serving.runtime) over an
-arrival scenario with the greedy controller in the loop, printing per-
-interval telemetry — the quickest way to exercise the serving stack without
-training an agent.
+instead serves an arrival scenario through the event-driven runtime with any
+registered controller in the loop (``--policy opd`` trains the agent first),
+printing per-interval telemetry. Everything is built from ``repro.api``
+specs, so the run is reproducible from its seeds.
 """
 from __future__ import annotations
 
@@ -29,29 +29,24 @@ from repro.models import api
 
 
 def run_pipeline(args):
-    from repro.cluster import RuntimeEnv
-    from repro.cluster.perf_model import make_pipeline
-    from repro.core import GreedyPolicy
-    from repro.serving import make_arrivals
+    from repro import api
 
-    pipe = make_pipeline(
-        [[ARCHS["whisper-small"], ARCHS["xlstm-125m"]],
-         [ARCHS["llama3.2-1b"], ARCHS["starcoder2-3b"]]],
-        name="serve2", quants=("bf16",))
-    arrivals = make_arrivals(args.scenario, rate=args.rate, seed=3)
-    env = RuntimeEnv(pipe, arrivals, horizon=args.horizon)
-    policy = GreedyPolicy(pipe)
-    print(f"{args.scenario}: {env.submitted} requests over {args.horizon}s")
-    done = False
-    while not done:
-        cfg = policy(env)
-        _, _, done, info = env.step(cfg)
+    exp = api.ExperimentSpec(
+        pipeline=api.get_pipeline("serve2"),
+        scenario=api.replace(api.get_scenario(args.scenario), rate=args.rate,
+                             seed=args.seed, horizon=args.horizon),
+        controller=api.replace(api.get_controller(args.policy),
+                               seed=args.seed))
+    sess = api.Session.from_spec(exp)
+    sess.train(log=print)
+
+    def show(env, cfg, info):
         print(f"t={env.runtime.now:5.0f}s z={cfg.z} f={cfg.f} b={cfg.b} "
               f"demand={info['demand']:5.1f}/s served={info['processed']:4d} "
               f"p95={info['p95'] * 1e3:7.1f}ms backlog={info['backlog']}")
-    s = env.drain()
-    print(f"served {s['served']}/{env.submitted} "
-          f"({s['throughput_rps']:.1f} req/s) "
+
+    s = sess.serve(on_step=show)["summary"]
+    print(f"served {s['served']} requests ({s['throughput_rps']:.1f} req/s) "
           f"p50={s['p50'] * 1e3:.0f}ms p95={s['p95'] * 1e3:.0f}ms "
           f"p99={s['p99'] * 1e3:.0f}ms")
 
@@ -67,8 +62,10 @@ def main():
     ap.add_argument("--pipeline", action="store_true",
                     help="serve an arrival scenario through the event-driven "
                          "pipeline runtime instead of single-arch decode")
-    from repro.serving.arrivals import SCENARIOS
-    ap.add_argument("--scenario", default="bursty", choices=SCENARIOS)
+    from repro.api import list_controllers, list_scenarios
+    ap.add_argument("--scenario", default="bursty", choices=list_scenarios())
+    ap.add_argument("--policy", default="greedy", choices=list_controllers())
+    ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--horizon", type=int, default=120)
     ap.add_argument("--rate", type=float, default=25.0)
     args = ap.parse_args()

@@ -3,7 +3,8 @@ from repro.serving.batcher import (Batcher, ContinuousBatcher, Request,
 from repro.serving.engine import StageServer, PipelineServer
 from repro.serving.arrivals import (ArrivalProcess, PoissonArrivals,
                                     TraceArrivals, BurstyArrivals,
-                                    RampArrivals, make_arrivals, SCENARIOS)
+                                    RampArrivals, make_arrivals,
+                                    arrivals_from_dict, SCENARIOS)
 from repro.serving.telemetry import Telemetry, percentile
 from repro.serving.runtime import (ServingRuntime, RuntimeStage,
                                    COLD_START_SECONDS)

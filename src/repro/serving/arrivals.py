@@ -13,13 +13,28 @@ import numpy as np
 
 
 class ArrivalProcess:
-    """Base: subclasses implement ``rates(horizon) -> [horizon] req/s``."""
+    """Base: subclasses implement ``rates(horizon) -> [horizon] req/s``.
+
+    Every process is a reproducible artifact: ``to_dict()`` captures its
+    full parameterisation (JSON-safe) and ``from_dict`` rebuilds it, so a
+    serialized experiment spec regenerates the identical arrival stream.
+    """
 
     def __init__(self, *, seed: int = 0):
         self.seed = seed
 
     def rates(self, horizon: int) -> np.ndarray:
         raise NotImplementedError
+
+    # ------------------------------------------------------ spec plumbing --
+    _spec_fields: tuple[str, ...] = ()
+
+    def to_dict(self) -> dict:
+        out = {"kind": type(self).__name__, "seed": self.seed}
+        for f in self._spec_fields:
+            v = getattr(self, f)
+            out[f] = v.tolist() if isinstance(v, np.ndarray) else v
+        return out
 
     def generate(self, horizon: float) -> np.ndarray:
         """Sorted arrival timestamps (virtual seconds) in [0, horizon)."""
@@ -40,6 +55,8 @@ class ArrivalProcess:
 class PoissonArrivals(ArrivalProcess):
     """Homogeneous Poisson process at ``rate`` req/s."""
 
+    _spec_fields = ("rate",)
+
     def __init__(self, rate: float, *, seed: int = 0):
         super().__init__(seed=seed)
         self.rate = float(rate)
@@ -52,6 +69,8 @@ class TraceArrivals(ArrivalProcess):
     """Trace-driven: per-second rates from a workload trace (req/s), e.g.
     ``cluster.workloads.make_trace``. The trace tiles if shorter than the
     horizon."""
+
+    _spec_fields = ("trace",)
 
     def __init__(self, trace: np.ndarray, *, seed: int = 0):
         super().__init__(seed=seed)
@@ -66,6 +85,9 @@ class BurstyArrivals(ArrivalProcess):
     """Diurnal sinusoid around ``base_rate`` with deterministic square bursts
     to ``burst_rate`` every ``period`` seconds for ``burst_len`` seconds —
     the adversarial pattern for a fixed provisioning policy."""
+
+    _spec_fields = ("base_rate", "burst_rate", "period", "burst_len",
+                    "diurnal_period")
 
     def __init__(self, base_rate: float, burst_rate: float, *,
                  period: float = 60.0, burst_len: float = 10.0,
@@ -90,6 +112,8 @@ class RampArrivals(ArrivalProcess):
     """Linear ramp from ``start_rate`` to ``end_rate`` over the horizon —
     exercises the controller's scale-up path."""
 
+    _spec_fields = ("start_rate", "end_rate")
+
     def __init__(self, start_rate: float, end_rate: float, *, seed: int = 0):
         super().__init__(seed=seed)
         self.start_rate = float(start_rate)
@@ -100,6 +124,20 @@ class RampArrivals(ArrivalProcess):
 
 
 SCENARIOS = ("bursty", "poisson", "ramp", "trace")
+
+_PROCESS_KINDS = {cls.__name__: cls for cls in
+                  (PoissonArrivals, TraceArrivals, BurstyArrivals,
+                   RampArrivals)}
+
+
+def arrivals_from_dict(d: dict) -> ArrivalProcess:
+    """Rebuild an ArrivalProcess from ``process.to_dict()`` output; the
+    constructor kwargs come from each class's own ``_spec_fields``."""
+    cls = _PROCESS_KINDS[d["kind"]]
+    kwargs = {f: d[f] for f in cls._spec_fields}
+    if "trace" in kwargs:
+        kwargs["trace"] = np.asarray(kwargs["trace"], dtype=np.float64)
+    return cls(**kwargs, seed=d.get("seed", 0))
 
 
 def make_arrivals(scenario: str, *, rate: float = 25.0, seed: int = 0,
@@ -116,7 +154,9 @@ def make_arrivals(scenario: str, *, rate: float = 25.0, seed: int = 0,
         return RampArrivals(0.2 * rate, 2.4 * rate, seed=seed)
     if scenario == "trace":
         if trace is None:
+            # default fluctuating trace scaled so it peaks near ``rate`` —
+            # the knob must act on every scenario, not silently no-op here
             from repro.cluster.workloads import make_trace
-            trace = make_trace("fluctuating", seed=seed) / 2.0
+            trace = make_trace("fluctuating", seed=seed, peak=2.0 * rate) / 2.0
         return TraceArrivals(trace, seed=seed)
     raise ValueError(f"unknown arrival scenario {scenario!r}")
