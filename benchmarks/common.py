@@ -1,10 +1,13 @@
-"""Shared benchmark plumbing: result paths, OPD policy training cache,
-CSV emission. Every fig*.py module exposes ``run(quick: bool) -> list[row]``
-where a row is (benchmark, metric, value, reference) — ``reference`` is the
-paper's claim the value should be compared against (or "" if none).
+"""Shared benchmark plumbing: CLI flags, result paths, OPD policy training
+cache, CSV emission. Every benchmark module exposes ``run(quick: bool) ->
+list[row]`` where a row is (benchmark, metric, value, reference) —
+``reference`` is the paper's claim the value should be compared against (or
+"" if none) — and a ``__main__`` that delegates to ``bench_main`` so the
+``--quick`` / ``--out DIR`` flags behave identically everywhere.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import pickle
@@ -14,10 +17,49 @@ import numpy as np
 RESULTS_DIR = os.path.join("experiments", "results")
 POLICY_CACHE = os.path.join("experiments", "opd_policy.pkl")
 
+_OUT_DIR: str | None = None          # --out override, set by bench_args
+
+
+def results_dir() -> str:
+    return _OUT_DIR or RESULTS_DIR
+
+
+def set_results_dir(path: str | None) -> None:
+    """Redirect ``save_results`` (benchmarks' JSON payloads) to ``path`` —
+    CI points this at an artifact dir so committed baselines in
+    experiments/results/ are never clobbered by a CI run."""
+    global _OUT_DIR
+    _OUT_DIR = path
+
+
+def bench_args(argv=None, *, description: str | None = None,
+               parser: argparse.ArgumentParser | None = None):
+    """The flags every benchmark script shares: ``--quick`` (CI-sized
+    episode/epoch counts) and ``--out DIR`` (JSON destination). Pass a
+    pre-built ``parser`` to stack script-specific flags on top."""
+    ap = parser or argparse.ArgumentParser(description=description)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced episode/epoch counts (CI-sized)")
+    ap.add_argument("--out", default=None, metavar="DIR",
+                    help=f"write JSON results here (default {RESULTS_DIR})")
+    args = ap.parse_args(argv)
+    if args.out:
+        set_results_dir(args.out)
+    return args
+
+
+def bench_main(run, argv=None) -> None:
+    """Shared ``__main__`` driver: parse the common flags, invoke
+    ``run(quick=...)``, emit the benchmark,metric,value,reference CSV."""
+    args = bench_args(argv)
+    print("benchmark,metric,value,reference")
+    for r in run(quick=args.quick):
+        print(",".join(str(x).replace(",", ";") for x in r))
+
 
 def save_results(name: str, payload: dict) -> None:
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+    os.makedirs(results_dir(), exist_ok=True)
+    with open(os.path.join(results_dir(), name + ".json"), "w") as f:
         json.dump(payload, f, indent=1, default=_np_default)
 
 

@@ -8,9 +8,7 @@ from __future__ import annotations
 
 import time
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import save_results
 from repro.cluster import make_trace
@@ -46,5 +44,6 @@ def run(quick: bool = False):
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    from benchmarks.common import bench_main
+
+    bench_main(run)

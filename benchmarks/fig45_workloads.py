@@ -76,5 +76,6 @@ def _rel(a: float, b: float) -> float:
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    from benchmarks.common import bench_main
+
+    bench_main(run)

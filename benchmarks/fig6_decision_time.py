@@ -5,8 +5,6 @@ workload cycle across 4 increasingly complex pipelines.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import save_results
 from repro.api import PipelineSpec
 from repro.cluster import PipelineEnv, make_trace
@@ -72,5 +70,6 @@ def run(quick: bool = False):
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    from benchmarks.common import bench_main
+
+    bench_main(run)

@@ -1,0 +1,50 @@
+"""CI perf gate: fail when a fresh benchmark result regresses below a
+fraction of the committed baseline.
+
+    python -m benchmarks.gate CURRENT.json \\
+        --baseline experiments/results/train_throughput.json \\
+        --metric vectorized.32.steps_per_s --min-ratio 0.5
+
+``--metric`` is a dotted path into the JSON payload. Higher is better; the
+gate passes when current >= min-ratio * baseline.
+"""
+
+import argparse
+import json
+import sys
+
+DEFAULT_METRIC = "vectorized.32.steps_per_s"
+
+
+def lookup(payload: dict, dotted: str) -> float:
+    node = payload
+    for part in dotted.split("."):
+        node = node[part]
+    return float(node)
+
+
+def load_metric(path: str, dotted: str) -> float:
+    with open(path) as f:
+        return lookup(json.load(f), dotted)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh result JSON (e.g. from --out DIR)")
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--metric", default=DEFAULT_METRIC, help="dotted metric path")
+    ap.add_argument("--min-ratio", type=float, default=0.5, help="fail threshold")
+    args = ap.parse_args(argv)
+
+    cur = load_metric(args.current, args.metric)
+    base = load_metric(args.baseline, args.metric)
+    ratio = cur / base if base else float("inf")
+    ok = ratio >= args.min_ratio
+    status = "OK" if ok else "REGRESSION"
+    print(f"{status}: {args.metric} current={cur:.1f} baseline={base:.1f}")
+    print(f"ratio={ratio:.2f} vs min-ratio={args.min_ratio}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -79,8 +79,9 @@ def run(quick: bool = False):
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    from benchmarks.common import bench_main
+
+    bench_main(run)
 
 
 def markdown(mesh: str = "16x16", baseline_dir: str | None = None) -> str:

@@ -1,9 +1,11 @@
 """Benchmark harness — one module per paper table/figure plus the roofline
-collector. ``PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3]``
+collector and the training-throughput benchmark.
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--out DIR] [--only fig3]``
 
 Emits ``benchmark,metric,value,reference`` CSV (reference = the paper claim
-the value validates against) and writes JSON payloads to
-experiments/results/.
+the value validates against) and writes JSON payloads to experiments/results/
+(or ``--out DIR``). The ``--quick`` / ``--out`` flags are shared with every
+stand-alone benchmark script via ``benchmarks.common.bench_args``.
 """
 from __future__ import annotations
 
@@ -11,19 +13,19 @@ import argparse
 import sys
 import time
 
+from benchmarks.common import bench_args
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="reduced episode/epoch counts (CI-sized)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
-                         "fig3,fig45,fig6,fig7,roofline,runtime")
-    args = ap.parse_args()
+                         "fig3,fig45,fig6,fig7,roofline,runtime,train")
+    args = bench_args(parser=ap)
 
     from benchmarks import (fig3_predictor, fig45_workloads,
                             fig6_decision_time, fig7_convergence, roofline,
-                            runtime_throughput)
+                            runtime_throughput, train_throughput)
     suites = {
         "fig3": fig3_predictor.run,
         "fig45": fig45_workloads.run,
@@ -31,6 +33,7 @@ def main() -> None:
         "fig7": fig7_convergence.run,
         "roofline": roofline.run,
         "runtime": runtime_throughput.run,
+        "train": train_throughput.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     print("benchmark,metric,value,reference")

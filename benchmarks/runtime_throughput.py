@@ -71,5 +71,6 @@ def run(quick: bool = False):
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    from benchmarks.common import bench_main
+
+    bench_main(run)

@@ -1,0 +1,113 @@
+"""Training-rollout throughput: the vectorized pure-JAX engine
+(``repro.core.vecenv``, one jitted scan-over-vmap call per episode batch)
+against the legacy per-step Python loop (one NumPy ``PipelineEnv`` step per
+iteration), at several ``num_envs``.
+
+Metrics are environment steps/s and episodes/s of on-policy rollout
+collection — the hot path PPO training spends its time in. Acceptance
+(ISSUE 3): >= 10x episodes/s at num_envs=32 vs the legacy loop on CPU. The
+committed JSON under experiments/results/ is the perf baseline the CI
+``bench-smoke`` job gates against (fail below 0.5x).
+"""
+from __future__ import annotations
+
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_results
+from repro import api
+from repro.cluster import PipelineEnv
+from repro.core import OPDTrainer, PPOConfig
+from repro.core import vecenv
+
+PIPELINE = "paper-4stage"
+SCENARIO = "fluctuating"
+ENV_COUNTS = (1, 8, 32)
+
+
+def run(quick: bool = False):
+    seconds = 300 if quick else 1200        # 30 / 120 decision steps
+    legacy_eps = 2 if quick else 4
+    # quick mode keeps more reps so the timed region stays long enough to
+    # be stable on noisy shared CI runners (the bench-smoke gate reads it)
+    vec_reps = 10 if quick else 5
+    scen = api.get_scenario(SCENARIO)
+    pipe = api.get_pipeline(PIPELINE).build()
+
+    def make_env(seed):
+        return PipelineEnv(pipe, scen.train_trace(seed, seconds=seconds),
+                           seed=seed)
+
+    tr = OPDTrainer(pipe, make_env, ppo=PPOConfig(), seed=0)
+    env0 = make_env(0)
+    n_steps = env0.n_steps
+
+    # -- legacy loop: one Python iteration per env step ------------------
+    tr._rollout(env0, False)                # jit warmup outside the timing
+    t0 = time.perf_counter()
+    for e in range(1, legacy_eps + 1):
+        tr._rollout(make_env(e), False)
+    wall = time.perf_counter() - t0
+    legacy = {"episodes": legacy_eps, "wall_s": wall,
+              "episodes_per_s": legacy_eps / wall,
+              "steps_per_s": legacy_eps * n_steps / wall}
+
+    # -- vectorized engine: scan episodes, vmap envs ---------------------
+    tables = vecenv.tables_from_pipeline(pipe)
+    weights = env0.w
+    base_key = jax.random.PRNGKey(0)
+    vec = {}
+    for n_envs in ENV_COUNTS:
+        traces = jnp.asarray(
+            np.stack([make_env(100 + i).trace for i in range(n_envs)]),
+            jnp.float32)
+        keys = jax.vmap(lambda s: jax.random.fold_in(base_key, s))(
+            jnp.arange(n_envs))
+        args = (tr.params, tables, traces, keys)
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            vecenv.vec_rollout(*args, n_steps=n_steps, weights=weights))
+        compile_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(vec_reps):
+            out = vecenv.vec_rollout(*args, n_steps=n_steps, weights=weights)
+        jax.block_until_ready(out)
+        wall = time.perf_counter() - t0
+        vec[str(n_envs)] = {
+            "episodes": n_envs * vec_reps, "wall_s": wall,
+            "compile_s": compile_s,
+            "episodes_per_s": n_envs * vec_reps / wall,
+            "steps_per_s": n_envs * vec_reps * n_steps / wall,
+        }
+
+    top = str(max(ENV_COUNTS))
+    speedup = vec[top]["episodes_per_s"] / legacy["episodes_per_s"]
+    payload = {
+        "mode": "quick" if quick else "full",
+        "pipeline": PIPELINE, "scenario": SCENARIO,
+        "steps_per_episode": n_steps,
+        "legacy": legacy, "vectorized": vec,
+        "speedup_episodes_at_32": speedup,
+        "jax": jax.__version__, "python": platform.python_version(),
+        "device": jax.devices()[0].platform,
+    }
+    save_results("train_throughput", payload)
+
+    rows = [("train_throughput", "legacy.steps_per_s",
+             round(legacy["steps_per_s"], 1), "")]
+    for n_envs in ENV_COUNTS:
+        rows.append(("train_throughput", f"vec{n_envs}.steps_per_s",
+                     round(vec[str(n_envs)]["steps_per_s"], 1), ""))
+    rows.append(("train_throughput", "speedup_episodes_at_32",
+                 round(speedup, 1), ">= 10x legacy loop (ISSUE 3)"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import bench_main
+
+    bench_main(run)

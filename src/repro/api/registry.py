@@ -128,7 +128,7 @@ def _register_builtin_controllers():
     register_controller(
         "opd", lambda spec, pipe, params: OPDPolicy(
             pipe, params, greedy=spec.greedy, seed=spec.seed),
-        spec=ControllerSpec(name="opd", train_episodes=4))
+        spec=ControllerSpec(name="opd", train_episodes=4, num_envs=4))
     register_controller("greedy", lambda spec, pipe, params: GreedyPolicy(pipe))
     register_controller(
         "ipa", lambda spec, pipe, params: IPAPolicy(pipe))

@@ -80,7 +80,8 @@ class Session:
         if self.trainer is None:
             self.trainer = OPDTrainer(
                 self.pipe, make_env,
-                ppo=PPOConfig(expert_freq=c.expert_freq), seed=c.seed)
+                ppo=PPOConfig(expert_freq=c.expert_freq), seed=c.seed,
+                num_envs=c.num_envs)
         for ep in range(1, episodes + 1):
             self.trainer.train_episode(ep, env_seed=ep)
             if log:

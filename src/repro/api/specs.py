@@ -10,7 +10,8 @@ reproduces the run bit-for-bit (every random draw derives from spec seeds).
 """
 from __future__ import annotations
 
-from dataclasses import asdict, dataclass, replace  # noqa: F401 (replace re-exported)
+# ``replace`` is re-exported through repro.api for spec overrides
+from dataclasses import asdict, dataclass, replace  # noqa: F401
 
 import numpy as np
 
@@ -105,6 +106,8 @@ class ControllerSpec:
     train_episodes: int = 0      # PPO episodes before serving (OPD only)
     train_seconds: int = 1200    # length of each training trace
     expert_freq: int = 2         # Alg. 2 expert-guided episode frequency
+    num_envs: int = 1            # parallel analytic envs per PPO episode
+    #                              (>1 -> the vectorized core.vecenv engine)
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -115,7 +118,8 @@ class ControllerSpec:
                    greedy=bool(d.get("greedy", True)),
                    train_episodes=int(d.get("train_episodes", 0)),
                    train_seconds=int(d.get("train_seconds", 1200)),
-                   expert_freq=int(d.get("expert_freq", 2)))
+                   expert_freq=int(d.get("expert_freq", 2)),
+                   num_envs=int(d.get("num_envs", 1)))
 
 
 @dataclass(frozen=True)

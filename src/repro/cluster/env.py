@@ -23,12 +23,9 @@ import numpy as np
 
 from repro.cluster.monitor import Monitor
 from repro.core.controller import Observation
-from repro.core.mdp import (Config, Pipeline, QoSWeights, accuracy_and_cost,
-                            evaluate, resource_usage, score_measurements,
-                            stage_latency)
-
-ADAPTATION_INTERVAL = 10          # seconds between decisions (paper §VI-B)
-COLD_START_FRACTION = 0.3         # capacity lost in the interval after a switch
+from repro.core.mdp import (ADAPTATION_INTERVAL, COLD_START_FRACTION, Config,
+                            Pipeline, QoSWeights, accuracy_and_cost, evaluate,
+                            resource_usage, score_measurements, stage_latency)
 
 
 class _ConfigEnvBase:

@@ -10,7 +10,10 @@ from repro.core.policy import (init_policy, apply_policy, sample_action,
                                log_prob_entropy, head_sizes, action_to_config,
                                config_to_action)
 from repro.core.ppo import PPOConfig, OPDTrainer, compute_gae
+from repro.core.vecenv import (PipelineTables, EnvState, tables_from_pipeline,
+                               init_state, decode_action, observe, step,
+                               rollout, vec_rollout, gae_scan, vec_gae)
 from repro.core.expert import ExpertPolicy
 from repro.core.baselines import RandomPolicy, GreedyPolicy, IPAPolicy
-from repro.core.opd import OPDPolicy, run_episode
+from repro.core.opd import OPDPolicy, run_episode, run_episodes_vectorized
 from repro.core.controller import Observation, ControllerBase, decide

@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.core.controller import ControllerBase, Observation
 from repro.core.mdp import (Config, Pipeline, QoSWeights, feasible,
-                            pipeline_metrics, qos, resource_usage)
+                            pipeline_metrics)
 
 
 class RandomPolicy(ControllerBase):

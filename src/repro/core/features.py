@@ -2,8 +2,6 @@
 dimensionality reduction -> residual blocks -> unified feature vector."""
 from __future__ import annotations
 
-import jax
-
 from repro import nn
 
 FEATURE_DIM = 128

@@ -12,9 +12,12 @@ Metrics (paper equations):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
+
+ADAPTATION_INTERVAL = 10          # seconds between decisions (paper §VI-B)
+COLD_START_FRACTION = 0.3         # capacity lost in the interval after a switch
 
 
 @dataclass(frozen=True)

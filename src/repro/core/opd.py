@@ -53,6 +53,28 @@ class OPDPolicy(ControllerBase):
         return action_to_config(self.pipe, a)
 
 
+def run_episodes_vectorized(pipe: Pipeline, params, traces, *, weights=None,
+                            greedy: bool = True, seed: int = 0) -> dict:
+    """Batch policy evaluation on the analytic dynamics: one episode per
+    trace row [B, seconds] via the pure-JAX engine (``core.vecenv``),
+    returning per-episode per-step arrays [B, T] (reward, qos, cost,
+    latency, throughput, excess, demand). Greedy decode by default, so the
+    result is deterministic in ``params`` and ``traces``."""
+    from repro.core.mdp import ADAPTATION_INTERVAL, QoSWeights
+    from repro.core.vecenv import tables_from_pipeline, vec_rollout
+
+    traces = np.asarray(traces, np.float32)
+    tables = tables_from_pipeline(pipe)
+    keys = jax.vmap(lambda s: jax.random.fold_in(jax.random.PRNGKey(seed),
+                                                 s))(jnp.arange(len(traces)))
+    out = vec_rollout(params, tables, jnp.asarray(traces), keys,
+                      n_steps=traces.shape[1] // ADAPTATION_INTERVAL,
+                      weights=weights or QoSWeights(), greedy=greedy)
+    keep = ("rewards", "qos", "cost", "latency", "throughput", "excess",
+            "demand", "actions")
+    return {k: np.asarray(out[k]) for k in keep}
+
+
 def run_episode(env, policy) -> dict:
     """Run one workload cycle under ``policy`` (a Controller or any legacy
     (env)->Config callable). Returns per-step arrays: reward, qos, cost,

@@ -1,6 +1,16 @@
 """PPO with clipped surrogate objective (Eq. 11/12) + expert-guided episodes
 (Algorithm 2). Optimiser: mini-batch Adam (paper: "Optimize the network by
 mini-batch SGD with Adam optimizer").
+
+Rollout collection has two engines:
+
+- legacy loop: one NumPy ``PipelineEnv`` stepped per Python iteration —
+  the reference path, and the only one that can drive the expert (host-side
+  coordinate descent) or the event-driven runtime;
+- vectorized (``num_envs > 1``): the pure-JAX ``core.vecenv`` engine rolls
+  ``num_envs`` analytic environments per episode in one jitted
+  scan-over-vmap call, with scan-based GAE (``benchmarks/train_throughput``
+  measures the speedup and CI gates it).
 """
 from __future__ import annotations
 
@@ -15,7 +25,12 @@ from repro.core.expert import ExpertPolicy
 from repro.core.mdp import Pipeline, QoSWeights
 from repro.core.policy import (action_to_config, config_to_action, head_sizes,
                                init_policy, log_prob_entropy, sample_action)
+from repro.core.vecenv import tables_from_pipeline, vec_gae, vec_rollout
 from repro.train import adamw_init, adamw_update, clip_by_global_norm
+
+# vectorized env seeds start here so they never collide with the small
+# integer seeds the legacy/expert episodes hand to make_env directly
+VEC_SEED_BASE = 100_000
 
 
 @dataclass(frozen=True)
@@ -78,7 +93,8 @@ class OPDTrainer:
     """Algorithm 2: expert-guided PPO training of the OPD policy."""
 
     def __init__(self, pipe: Pipeline, make_env, *, ppo: PPOConfig | None = None,
-                 weights: QoSWeights | None = None, seed: int = 0):
+                 weights: QoSWeights | None = None, seed: int = 0,
+                 num_envs: int = 1):
         self.pipe = pipe
         self.make_env = make_env
         self.ppo = ppo or PPOConfig()
@@ -95,6 +111,14 @@ class OPDTrainer:
         # replay memory D of expert transitions (Algorithm 2)
         self.expert_states = np.zeros((0, env.state_dim), np.float32)
         self.expert_actions = np.zeros((0, len(self.sizes)), np.int32)
+        # vectorized rollout engine (core.vecenv): analytic envs without an
+        # external predictor only — expert episodes and runtime envs keep
+        # the legacy per-step loop
+        self.num_envs = max(1, int(num_envs))
+        self._vec_ok = (self.num_envs > 1 and hasattr(env, "trace")
+                        and getattr(env, "predictor", None) is None)
+        self._tables = tables_from_pipeline(pipe) if self._vec_ok else None
+        self._weights = getattr(env, "w", None) or QoSWeights()
 
     def _rollout(self, env, use_expert: bool):
         states, actions, logps, rewards, values = [], [], [], [], []
@@ -128,22 +152,41 @@ class OPDTrainer:
                 np.asarray(logps, np.float32), np.asarray(rewards, np.float32),
                 np.asarray(values, np.float32), float(last_v[0]))
 
-    def train_episode(self, episode_idx: int, *, env_seed: int | None = None):
+    def _rollout_vec(self, base_seed: int):
+        """Collect ``num_envs`` parallel episodes with the pure-JAX engine:
+        one jitted scan-over-vmap call. Env seeds are ``VEC_SEED_BASE +
+        base_seed * num_envs + i`` — distinct traces per env, disjoint
+        across episodes AND from the small legacy/expert episode seeds, so
+        the expert replay memory never replays an on-policy trace. Returns
+        flattened [num_envs * T] trajectory arrays + batched GAE."""
         cfg = self.ppo
-        use_expert = cfg.expert_freq > 0 and episode_idx % cfg.expert_freq == 0
-        env = self.make_env(env_seed if env_seed is not None else episode_idx)
-        states, actions, logps, rewards, values, last_v = self._rollout(
-            env, use_expert)
-        adv, returns = compute_gae(rewards * cfg.reward_scale, values, last_v,
-                                   gamma=cfg.gamma, lam=cfg.gae_lambda)
-        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        s0 = VEC_SEED_BASE + base_seed * self.num_envs
+        envs = [self.make_env(s0 + i) for i in range(self.num_envs)]
+        n_steps = envs[0].n_steps
+        assert all(e.n_steps == n_steps for e in envs), \
+            "vectorized rollout needs equal-length traces"
+        traces = jnp.asarray(np.stack([e.trace for e in envs]), jnp.float32)
+        self.key, ep_key = jax.random.split(self.key)
+        seeds = jnp.arange(s0, s0 + self.num_envs)
+        env_keys = jax.vmap(lambda s: jax.random.fold_in(ep_key, s))(seeds)
+        traj = vec_rollout(self.params, self._tables, traces, env_keys,
+                           n_steps=n_steps, weights=self._weights)
+        adv, returns = vec_gae(traj["rewards"] * cfg.reward_scale,
+                               traj["values"], traj["last_value"],
+                               gamma=cfg.gamma, lam=cfg.gae_lambda)
+        def flat(a):
+            return np.asarray(a).reshape(-1, *a.shape[2:])
 
-        if use_expert:          # store in replay memory D (Alg. 2)
-            self.expert_states = np.concatenate(
-                [self.expert_states, states])[-cfg.expert_buffer:]
-            self.expert_actions = np.concatenate(
-                [self.expert_actions, actions])[-cfg.expert_buffer:]
+        return (flat(traj["states"]).astype(np.float32),
+                flat(traj["actions"]).astype(np.int32),
+                flat(traj["logps"]).astype(np.float32),
+                np.asarray(traj["rewards"], np.float32),
+                flat(adv).astype(np.float32),
+                flat(returns).astype(np.float32))
 
+    def _update(self, states, actions, logps, adv, returns):
+        """Mini-batch Adam epochs over one batch of transitions (Eq. 11)."""
+        cfg = self.ppo
         T = len(states)
         losses, pls, vls, ents = [], [], [], []
         for _ in range(cfg.epochs):
@@ -175,6 +218,35 @@ class OPDTrainer:
                 pls.append(float(l_clip))
                 vls.append(float(l_vf))
                 ents.append(float(l_ent))
+        return losses, pls, vls, ents
+
+    def train_episode(self, episode_idx: int, *, env_seed: int | None = None):
+        cfg = self.ppo
+        use_expert = cfg.expert_freq > 0 and episode_idx % cfg.expert_freq == 0
+        base = env_seed if env_seed is not None else episode_idx
+
+        if self._vec_ok and not use_expert:
+            states, actions, logps, rewards, adv, returns = \
+                self._rollout_vec(base)
+        else:
+            # expert episodes stay on the legacy loop: the expert is a
+            # host-side coordinate-descent search (Alg. 2)
+            env = self.make_env(base)
+            states, actions, logps, rewards, values, last_v = self._rollout(
+                env, use_expert)
+            adv, returns = compute_gae(rewards * cfg.reward_scale, values,
+                                       last_v, gamma=cfg.gamma,
+                                       lam=cfg.gae_lambda)
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+
+        if use_expert:          # store in replay memory D (Alg. 2)
+            self.expert_states = np.concatenate(
+                [self.expert_states, states])[-cfg.expert_buffer:]
+            self.expert_actions = np.concatenate(
+                [self.expert_actions, actions])[-cfg.expert_buffer:]
+
+        losses, pls, vls, ents = self._update(states, actions, logps, adv,
+                                              returns)
 
         self.history["reward"].append(float(rewards.mean()))
         self.history["loss"].append(float(np.mean(losses)))

@@ -6,7 +6,6 @@ includes a 25-unit LSTM layer followed by a one-unit dense output layer."
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

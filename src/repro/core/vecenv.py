@@ -1,0 +1,243 @@
+"""Vectorized pure-JAX rollout engine for OPD training.
+
+Re-expresses the analytic ``PipelineEnv`` dynamics — Eq. (1)-(4)/(7) scoring,
+arrival-trace windowing, and the policy's action -> config decoding — as pure
+``jax.numpy`` functions: one environment advances with the jitted ``step``,
+an episode rolls with ``lax.scan`` (``rollout``), and parallel environments
+``vmap`` across seeds / traces (``vec_rollout``). The NumPy ``PipelineEnv``
+stays the reference implementation (``tests/test_vecenv.py`` pins step and
+reward equivalence between the two) and the only backend for the
+event-driven runtime path.
+
+Scope, mirroring exactly what the PPO training path constructs:
+
+- no external load predictor (predicted load = current load), matching the
+  envs built by ``Session.train`` and ``benchmarks.common.trained_opd``;
+- per-task variant tables are padded to the max variant count and indexed
+  modulo the true per-task count, matching ``policy.action_to_config``.
+
+The env itself is deterministic given its trace — all rollout stochasticity
+comes from the policy's sampling key, which is per-environment so that
+vmapped rollouts are permutation-invariant along the env axis.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mdp import (ADAPTATION_INTERVAL, COLD_START_FRACTION,
+                            Pipeline, QoSWeights)
+from repro.core.policy import apply_policy, sample_action
+
+
+class PipelineTables(NamedTuple):
+    """A ``Pipeline``'s static physics as arrays ([N, V_max] per-variant
+    attributes, padded by repeating each task's last variant)."""
+    accuracy: jax.Array      # [N, V]  v_n(z)
+    cost: jax.Array          # [N, V]  c_n(z)
+    resource: jax.Array      # [N, V]  w_n(z)
+    alpha: jax.Array         # [N, V]  fixed per-batch latency (s)
+    beta: jax.Array          # [N, V]  per-item latency slope (s)
+    n_variants: jax.Array    # [N]     true |Z_n| before padding
+    batch_choices: jax.Array  # [nb]   the b knob's value set (1, 2, 4, ...)
+    f_max: jax.Array         # scalar
+    b_max: jax.Array         # scalar
+    w_max: jax.Array         # scalar W_max
+
+    @property
+    def n_tasks(self) -> int:
+        return self.accuracy.shape[0]
+
+
+class EnvState(NamedTuple):
+    """One analytic environment: interval index + live configuration."""
+    t: jax.Array             # scalar i32, adaptation-interval index
+    z: jax.Array             # [N] i32 variant per task
+    f: jax.Array             # [N] i32 replicas per task
+    b: jax.Array             # [N] i32 batch size per task (actual value)
+
+
+def tables_from_pipeline(pipe: Pipeline) -> PipelineTables:
+    v_max = max(len(t.variants) for t in pipe.tasks)
+
+    def tab(attr):
+        rows = []
+        for task in pipe.tasks:
+            vals = [float(getattr(v, attr)) for v in task.variants]
+            rows.append(vals + [vals[-1]] * (v_max - len(vals)))
+        return jnp.asarray(np.asarray(rows, np.float32))
+
+    return PipelineTables(
+        accuracy=tab("accuracy"), cost=tab("cost"), resource=tab("resource"),
+        alpha=tab("alpha"), beta=tab("beta"),
+        n_variants=jnp.asarray([len(t.variants) for t in pipe.tasks],
+                               jnp.int32),
+        batch_choices=jnp.asarray(pipe.batch_choices(), jnp.int32),
+        f_max=jnp.float32(pipe.f_max), b_max=jnp.float32(pipe.b_max),
+        w_max=jnp.float32(pipe.w_max))
+
+
+def init_state(tables: PipelineTables) -> EnvState:
+    """The default configuration every episode starts from (z=0, f=1, b=1)."""
+    n = tables.n_tasks
+    return EnvState(t=jnp.int32(0), z=jnp.zeros(n, jnp.int32),
+                    f=jnp.ones(n, jnp.int32), b=jnp.ones(n, jnp.int32))
+
+
+def decode_action(tables: PipelineTables, action: jax.Array):
+    """Policy head indices [3N] -> (z, f, b) arrays; the jnp twin of
+    ``policy.action_to_config`` (modulo-clamped variants, f 1-based,
+    batch looked up in the power-of-two choice set)."""
+    z = action[0::3] % tables.n_variants
+    f = action[1::3] + 1
+    nb = tables.batch_choices.shape[0]
+    b = tables.batch_choices[action[2::3] % nb]
+    return z.astype(jnp.int32), f.astype(jnp.int32), b.astype(jnp.int32)
+
+
+def _gather(table: jax.Array, z: jax.Array) -> jax.Array:
+    """table [N, V], z [N] -> per-task values [N]."""
+    return jnp.take_along_axis(table, z[:, None], axis=1)[:, 0]
+
+
+def observe(tables: PipelineTables, state: EnvState,
+            trace: jax.Array) -> jax.Array:
+    """Eq. (5) observation [N * 9]; predicted load = current load (the
+    training envs attach no external predictor)."""
+    z, f, b = state.z, state.f.astype(jnp.float32), state.b.astype(jnp.float32)
+    res = _gather(tables.resource, z)
+    usage = jnp.sum(res * f)
+    u = (tables.w_max - usage) / tables.w_max
+    s = state.t * ADAPTATION_INTERVAL
+    cur = trace[jnp.maximum(0, s - 1)]
+    p = cur / 100.0
+    lat = _gather(tables.alpha, z) + _gather(tables.beta, z) * b
+    thr = f * b / lat
+    n = tables.n_tasks
+    rows = jnp.stack([
+        jnp.full((n,), u), jnp.full((n,), p), jnp.full((n,), p),
+        lat,
+        thr / 100.0,
+        z / jnp.maximum(1, tables.n_variants - 1),
+        f / tables.f_max,
+        b / tables.b_max,
+        f * _gather(tables.cost, z) / tables.w_max,
+    ], axis=1)
+    return rows.reshape(-1).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("weights",))
+def step(tables: PipelineTables, state: EnvState, action: jax.Array,
+         trace: jax.Array, weights: QoSWeights):
+    """One adaptation interval: decode ``action`` (policy head indices
+    [3N]), apply the configuration, score Eq. (1)-(4)/(7) on the trace
+    window. Deterministic given the trace. Returns (state', obs', reward,
+    metrics)."""
+    w = weights
+    z, f, b = decode_action(tables, action)
+    fb = f.astype(jnp.float32) * b.astype(jnp.float32)
+
+    s0 = state.t * ADAPTATION_INTERVAL
+    window = jax.lax.dynamic_slice(trace, (s0,), (ADAPTATION_INTERVAL,))
+    demand = jnp.mean(window)
+
+    switched = (z != state.z).astype(jnp.float32)
+    cold = COLD_START_FRACTION * jnp.sum(switched) / tables.n_tasks
+
+    acc = _gather(tables.accuracy, z)
+    cost = _gather(tables.cost, z)
+    res = _gather(tables.resource, z)
+    lat = _gather(tables.alpha, z) + _gather(tables.beta, z) * b
+    thr = fb / lat
+
+    v_sum = jnp.sum(acc)
+    c_sum = jnp.sum(cost * f)
+    # stage_latency: batch-assembly wait + M/M/1-style congested service
+    wait = jnp.minimum(fb / jnp.maximum(demand, 1e-6), 2.0)
+    rho = demand / jnp.maximum(thr, 1e-9)
+    congestion = 1.0 / jnp.maximum(1.0 - rho, 0.1)
+    lat_total = jnp.sum(wait + lat * congestion)
+
+    capacity = jnp.min(thr) * (1.0 - cold)
+    excess = demand - capacity
+    t_meas = jnp.minimum(demand, capacity)
+
+    qos = (w.alpha * v_sum + w.beta * t_meas - lat_total
+           - jnp.where(excess >= 0, w.gamma * excess, w.delta * (-excess)))
+    reward = qos - w.beta_c * c_sum - w.gamma_b * jnp.max(b)
+    infeasible = jnp.sum(res * f) > tables.w_max
+    reward = reward - 50.0 * infeasible
+
+    new_state = EnvState(t=state.t + 1, z=z, f=f, b=b)
+    metrics = {"qos": qos, "cost": c_sum, "latency": lat_total,
+               "throughput": t_meas, "excess": excess, "demand": demand,
+               "capacity": capacity, "infeasible": infeasible}
+    return new_state, observe(tables, new_state, trace), reward, metrics
+
+
+def rollout(params, tables: PipelineTables, trace: jax.Array, key: jax.Array,
+            *, n_steps: int, weights: QoSWeights, greedy: bool = False):
+    """One on-policy episode via ``lax.scan``: sample action, step the env,
+    collect the PPO trajectory. Uses the same ``sample_action`` as serving,
+    so vectorized training and deployment share the policy path."""
+    state0 = init_state(tables)
+    obs0 = observe(tables, state0, trace)
+
+    def one_step(carry, _):
+        state, obs, k = carry
+        k, sub = jax.random.split(k)
+        action, logp, value = sample_action(params, obs, sub, greedy=greedy)
+        state, obs_next, r, metrics = step(tables, state, action, trace,
+                                           weights)
+        out = {"states": obs, "actions": action, "logps": logp,
+               "rewards": r, "values": value, **metrics}
+        return (state, obs_next, k), out
+
+    (_, obs_last, _), traj = jax.lax.scan(one_step, (state0, obs0, key),
+                                          None, length=n_steps)
+    _, last_value = apply_policy(params, obs_last[None])
+    traj["last_value"] = last_value[0]
+    return traj
+
+
+@partial(jax.jit, static_argnames=("n_steps", "weights", "greedy"))
+def vec_rollout(params, tables: PipelineTables, traces: jax.Array,
+                keys: jax.Array, *, n_steps: int, weights: QoSWeights,
+                greedy: bool = False):
+    """Parallel episodes: vmap ``rollout`` over (trace, key) pairs. Returns
+    env-major arrays [num_envs, n_steps, ...] plus ``last_value``
+    [num_envs]. Each env consumes only its own key and trace, so permuting
+    the env axis permutes the outputs."""
+    fn = partial(rollout, n_steps=n_steps, weights=weights, greedy=greedy)
+    return jax.vmap(lambda tr, k: fn(params, tables, tr, k))(traces, keys)
+
+
+@partial(jax.jit, static_argnames=("gamma", "lam"))
+def gae_scan(rewards: jax.Array, values: jax.Array, last_value: jax.Array,
+             *, gamma: float, lam: float):
+    """Scan-based GAE over one episode [T]; the jnp twin of
+    ``ppo.compute_gae``. Returns (advantages, returns)."""
+
+    def back(carry, rv):
+        gae, v_next = carry
+        r, v = rv
+        delta = r + gamma * v_next - v
+        gae = delta + gamma * lam * gae
+        return (gae, v), gae
+
+    init = (jnp.zeros_like(last_value), last_value)
+    _, adv = jax.lax.scan(back, init, (rewards, values), reverse=True)
+    return adv, adv + values
+
+
+@partial(jax.jit, static_argnames=("gamma", "lam"))
+def vec_gae(rewards: jax.Array, values: jax.Array, last_values: jax.Array,
+            *, gamma: float, lam: float):
+    """Batched GAE: [num_envs, T] rewards/values, [num_envs] bootstrap."""
+    fn = partial(gae_scan, gamma=gamma, lam=lam)
+    return jax.vmap(lambda r, v, lv: fn(r, v, lv))(rewards, values,
+                                                   last_values)

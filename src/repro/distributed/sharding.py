@@ -16,7 +16,6 @@ Principles (baseline scheme — the §Perf hillclimb iterates from here):
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import api
@@ -190,9 +189,6 @@ def opt_shardings(cfg: ArchConfig, mesh, *, multi_pod: bool = False):
     emits at the adamw_update boundary."""
     M = mesh.shape["model"]
     dp = dp_axes(multi_pod)
-    dp_size = 1
-    for a in dp:
-        dp_size *= mesh.shape[a]
     params_shape = jax.eval_shape(lambda k: api.init_model(k, cfg),
                                   jax.random.PRNGKey(0))
 

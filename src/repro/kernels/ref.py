@@ -27,7 +27,6 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int | None = No
 def decode_attention_ref(q, k, v, valid_mask):
     """q [B, 1, H, D]; k, v [B, C, Hkv, D]; valid_mask [B, C] -> [B, 1, H, D]."""
     B, _, H, D = q.shape
-    C = k.shape[1]
     Hkv = k.shape[2]
     g = H // Hkv
     qg = q.reshape(B, 1, Hkv, g, D).astype(jnp.float32)

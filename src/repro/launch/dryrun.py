@@ -14,11 +14,9 @@ on first jax init) — keep these the first two statements of the module.
 
 import argparse
 import json
-import re
 import time
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat

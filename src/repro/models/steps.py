@@ -12,8 +12,8 @@ import jax.numpy as jnp
 
 from repro.models import api, whisper
 from repro.models.config import ArchConfig, InputShape, LONG_WINDOW
-from repro.train import (adamw_init, adamw_update, chunked_lm_head_loss,
-                         clip_by_global_norm, lm_loss)
+from repro.train import (adamw_update, chunked_lm_head_loss,
+                         clip_by_global_norm)
 
 
 # --------------------------------------------------------------- specs ----

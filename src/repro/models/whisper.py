@@ -123,7 +123,6 @@ def prefill_cache(params, batch, cfg: ArchConfig, context: int):
 
 def decode_step(params, batch, cache, cfg: ArchConfig, *, ring: bool = False):
     tokens = batch["tokens"]
-    B = tokens.shape[0]
     pos = cache["pos"]
     pos_ids = (pos % MAX_POSITIONS)[:, None]
     h = nn.embedding(params["embed"], tokens) + nn.embedding(params["pos"], pos_ids)

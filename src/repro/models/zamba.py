@@ -9,7 +9,6 @@ applications (9 for the 54-layer config), not all 54 layers.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -38,7 +38,6 @@ def _qkv(params, x, n_heads: int, n_kv: int, head_dim: int):
 def _sdpa(q, k, v, mask):
     """q [B,S,H,D]; k,v [B,T,Hkv,D]; mask [S,T] or [B,S,T] additive(-inf) bool=keep."""
     B, S, H, D = q.shape
-    T = k.shape[1]
     Hkv = k.shape[2]
     group = H // Hkv
     qg = q.reshape(B, S, Hkv, group, D)
@@ -76,7 +75,7 @@ def _sdpa_blocked(q, k, v, *, window=None, kv_chunk: int = 1024):
     iq = jnp.arange(S)
 
     def body(carry, inp):
-        m, l, acc = carry                       # [B,S,H] / [B,S,H] / [..,D]
+        m, lsum, acc = carry                    # [B,S,H] / [B,S,H] / [..,D]
         k_k, v_k, j0 = inp                      # [B,chunk,Hkv,D]
         kr = jnp.repeat(k_k, g, axis=2)         # [B,chunk,H,D]
         vr = jnp.repeat(v_k, g, axis=2)
@@ -89,16 +88,16 @@ def _sdpa_blocked(q, k, v, *, window=None, kv_chunk: int = 1024):
         m_new = jnp.maximum(m, logits.max(axis=-1))
         p = jnp.exp(logits - m_new[..., None])
         scale = jnp.exp(m - m_new)
-        l = l * scale + p.sum(axis=-1)
+        lsum = lsum * scale + p.sum(axis=-1)
         acc = acc * scale[..., None] + jnp.einsum("bshc,bchd->bshd", p, vr)
-        return (m_new, l, acc), None
+        return (m_new, lsum, acc), None
 
     m0 = jnp.full((B, S, H), _NEG, jnp.float32)
     l0 = jnp.zeros((B, S, H), jnp.float32)
     a0 = jnp.zeros((B, S, H, D), jnp.float32)
     offs = jnp.arange(nb) * chunk
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, offs))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    (m, lsum, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, offs))
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]
     return out.astype(q.dtype)
 
 

@@ -16,7 +16,6 @@ O(chunk^2 + P*N) instead of O(T * P * N) for a naive associative scan.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,6 @@ from repro.nn.norms import init_rmsnorm, rmsnorm
 
 def init_mlstm(key, dim: int, n_heads: int, *, expand: int = 2, dtype=jnp.float32):
     d_inner = expand * dim
-    P = d_inner // n_heads
     ks = jax.random.split(key, 8)
     return {
         "up": init_linear(ks[0], dim, 2 * d_inner, dtype=dtype),   # -> (x, gate)

@@ -12,8 +12,6 @@ production, charged by the simulator).
 """
 from __future__ import annotations
 
-import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ from repro.nn.linear import linear
 
 def lm_loss(logits, labels, *, mask=None, lb_loss=None, lb_coeff: float = 0.01):
     """logits [B, S, V]; labels [B, S] (-100 = ignore); returns (loss, metrics)."""
-    V = logits.shape[-1]
     valid = labels >= 0
     if mask is not None:
         valid = valid & mask

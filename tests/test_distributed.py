@@ -13,7 +13,6 @@ import pytest
 from repro.compat import abstract_mesh
 from repro.configs import ARCHS
 from repro.distributed import sharding as shd
-from repro.models.config import INPUT_SHAPES
 
 
 class TestShardingSpecs:
@@ -25,8 +24,6 @@ class TestShardingSpecs:
         mesh = abstract_mesh((16, 16), ("data", "model"))
         for kind in ("train", "decode"):
             psh = shd.param_shardings(cfg, mesh, kind=kind)
-            import numpy as np
-
             shapes = jax.eval_shape(
                 lambda k: __import__("repro.models.api", fromlist=["api"])
                 .init_model(k, cfg), jax.random.PRNGKey(0))

@@ -2,7 +2,6 @@
 that guarantee prefill and decode paths compute the same function."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro import nn
 

@@ -3,7 +3,6 @@ PPO training step, baselines, expert, and the Algorithm-1 loop."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
 from repro.cluster import default_pipeline, make_trace, PipelineEnv
@@ -12,8 +11,8 @@ from repro.core import (ExpertPolicy, GreedyPolicy, IPAPolicy, OPDPolicy,
                         compute_gae, config_to_action, head_sizes, init_policy,
                         log_prob_entropy, run_episode, sample_action)
 from repro.core.mdp import feasible
-from repro.core.predictor import (HISTORY, init_predictor, predict_batch,
-                                  smape, train_predictor, as_predictor_fn)
+from repro.core.predictor import (HISTORY, init_predictor, smape,
+                                  train_predictor, as_predictor_fn)
 
 PIPE = default_pipeline()
 
@@ -117,8 +116,10 @@ class TestBaselines:
             IPAPolicy(pipe)(env)
         ipa_s = IPAPolicy(small)
         ipa_b = IPAPolicy(big)
-        env_s = PipelineEnv(small, make_trace("steady_low", seed=0)); env_s.reset()
-        env_b = PipelineEnv(big, make_trace("steady_low", seed=0)); env_b.reset()
+        env_s = PipelineEnv(small, make_trace("steady_low", seed=0))
+        env_s.reset()
+        env_b = PipelineEnv(big, make_trace("steady_low", seed=0))
+        env_b.reset()
         ipa_s(env_s)
         ipa_b(env_b)
         assert ipa_b.decision_times[-1] > ipa_s.decision_times[-1]

@@ -32,7 +32,6 @@ def test_requests_flow_through_all_stages(server):
 
 
 def test_reconfigure_switches_variant(server):
-    z_before = server.stages[0].z
     server.apply_config(Config(z=(1, 0), f=(2, 1), b=(2, 8)))
     assert server.stages[0].z == 1
     assert server.stages[0].batcher.batch_size == 2

@@ -6,7 +6,7 @@ import pytest
 
 from repro.cluster import PipelineEnv, make_pipeline, make_trace
 from repro.configs import ARCHS
-from repro.core import (GreedyPolicy, IPAPolicy, OPDPolicy, OPDTrainer,
+from repro.core import (IPAPolicy, OPDPolicy, OPDTrainer,
                         PPOConfig, RandomPolicy, run_episode)
 
 

@@ -1,0 +1,248 @@
+"""Tests for the vectorized pure-JAX rollout engine (repro.core.vecenv):
+step/reward equivalence with the NumPy ``PipelineEnv`` reference across all
+registered pipelines, scan-GAE vs the NumPy ``compute_gae`` loop,
+permutation invariance of vmapped rollouts along the env axis, and
+bit-for-bit reproducibility of ``Session.train`` with ``num_envs > 1``."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro import api
+from repro.cluster import PipelineEnv, make_trace
+from repro.core import (OPDTrainer, PPOConfig, action_to_config, compute_gae,
+                        head_sizes, init_policy)
+from repro.core import vecenv
+from repro.core.mdp import QoSWeights
+
+WEIGHTS = QoSWeights()
+
+
+def _random_actions(pipe, rng, n):
+    sizes = head_sizes(pipe)
+    return [np.array([rng.integers(0, s) for s in sizes], np.int32)
+            for _ in range(n)]
+
+
+class TestStepEquivalence:
+    @pytest.mark.parametrize("name", api.list_pipelines())
+    def test_step_reward_obs_match_reference(self, name):
+        """vecenv.step reproduces PipelineEnv dynamics for the same action
+        sequence: observation, reward, and every scored metric."""
+        pipe = api.get_pipeline(name).build()
+        trace = make_trace("fluctuating", seed=3, seconds=150)
+        env = PipelineEnv(pipe, trace, seed=0)
+        tables = vecenv.tables_from_pipeline(pipe)
+        state = vecenv.init_state(tables)
+        tr32 = jnp.asarray(trace, jnp.float32)
+
+        obs_ref = env.reset()
+        obs_vec = vecenv.observe(tables, state, tr32)
+        assert np.allclose(obs_ref, np.asarray(obs_vec), atol=1e-4)
+
+        rng = np.random.default_rng(0)
+        for a in _random_actions(pipe, rng, env.n_steps):
+            obs_r, r_ref, _, info = env.step(action_to_config(pipe, a))
+            state, obs_v, r_vec, m = vecenv.step(tables, state,
+                                                 jnp.asarray(a), tr32,
+                                                 WEIGHTS)
+            assert np.isclose(r_ref, float(r_vec), rtol=1e-4, atol=5e-2)
+            assert np.allclose(obs_r, np.asarray(obs_v), atol=1e-3)
+            assert bool(m["infeasible"]) == info["infeasible"]
+            for k in ("qos", "cost", "latency", "throughput", "excess",
+                      "demand"):
+                assert np.isclose(info[k], float(m[k]), rtol=1e-4,
+                                  atol=5e-2), k
+
+    def test_decode_action_matches_action_to_config(self):
+        pipe = api.get_pipeline("paper-4stage").build()
+        tables = vecenv.tables_from_pipeline(pipe)
+        rng = np.random.default_rng(1)
+        for a in _random_actions(pipe, rng, 25):
+            cfg = action_to_config(pipe, a)
+            z, f, b = vecenv.decode_action(tables, jnp.asarray(a))
+            assert tuple(np.asarray(z)) == cfg.z
+            assert tuple(np.asarray(f)) == cfg.f
+            assert tuple(np.asarray(b)) == cfg.b
+
+
+class TestGAE:
+    @given(st.lists(st.floats(-5, 5), min_size=2, max_size=40),
+           st.floats(0.5, 1.0), st.floats(0.5, 1.0))
+    @settings(max_examples=25, deadline=None)
+    def test_scan_matches_numpy_loop(self, rewards, gamma, lam):
+        r = np.asarray(rewards, np.float32)
+        v = np.linspace(-1.0, 1.0, len(r)).astype(np.float32)
+        adv_np, ret_np = compute_gae(r, v, 0.5, gamma=gamma, lam=lam)
+        adv_j, ret_j = vecenv.gae_scan(jnp.asarray(r), jnp.asarray(v),
+                                       jnp.float32(0.5), gamma=gamma,
+                                       lam=lam)
+        assert np.allclose(adv_np, np.asarray(adv_j), atol=1e-4)
+        assert np.allclose(ret_np, np.asarray(ret_j), atol=1e-4)
+
+    def test_vec_gae_equals_per_env_scan(self):
+        rng = np.random.default_rng(0)
+        r = rng.normal(size=(3, 17)).astype(np.float32)
+        v = rng.normal(size=(3, 17)).astype(np.float32)
+        lv = rng.normal(size=3).astype(np.float32)
+        adv, ret = vecenv.vec_gae(jnp.asarray(r), jnp.asarray(v),
+                                  jnp.asarray(lv), gamma=0.97, lam=0.9)
+        for i in range(3):
+            a_i, r_i = compute_gae(r[i], v[i], float(lv[i]), gamma=0.97,
+                                   lam=0.9)
+            assert np.allclose(np.asarray(adv[i]), a_i, atol=1e-4)
+            assert np.allclose(np.asarray(ret[i]), r_i, atol=1e-4)
+
+
+class TestVecRollout:
+    B, SECONDS = 4, 120
+
+    def _setup(self):
+        pipe = api.get_pipeline("serve2").build()
+        tables = vecenv.tables_from_pipeline(pipe)
+        params = init_policy(jax.random.PRNGKey(0), pipe.n_tasks * 9,
+                             head_sizes(pipe))
+        traces = jnp.asarray(
+            np.stack([make_trace("fluctuating", seed=i, seconds=self.SECONDS)
+                      for i in range(self.B)]), jnp.float32)
+        keys = jax.vmap(lambda s: jax.random.fold_in(jax.random.PRNGKey(9),
+                                                     s))(jnp.arange(self.B))
+        return pipe, tables, params, traces, keys
+
+    def test_shapes_and_finiteness(self):
+        pipe, tables, params, traces, keys = self._setup()
+        n_steps = self.SECONDS // 10
+        out = vecenv.vec_rollout(params, tables, traces, keys,
+                                 n_steps=n_steps, weights=WEIGHTS)
+        assert out["states"].shape == (self.B, n_steps, pipe.n_tasks * 9)
+        assert out["actions"].shape == (self.B, n_steps,
+                                        len(head_sizes(pipe)))
+        assert out["last_value"].shape == (self.B,)
+        for k in ("rewards", "values", "logps", "qos"):
+            assert out[k].shape == (self.B, n_steps)
+            assert np.isfinite(np.asarray(out[k])).all(), k
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=8, deadline=None)
+    def test_permutation_invariant_along_env_axis(self, perm_seed):
+        """Each env consumes only its own (trace, key): permuting the env
+        axis of the inputs permutes every output exactly."""
+        _, tables, params, traces, keys = self._setup()
+        n_steps = self.SECONDS // 10
+        out = vecenv.vec_rollout(params, tables, traces, keys,
+                                 n_steps=n_steps, weights=WEIGHTS)
+        perm = np.random.default_rng(perm_seed).permutation(self.B)
+        out_p = vecenv.vec_rollout(params, tables, traces[perm], keys[perm],
+                                   n_steps=n_steps, weights=WEIGHTS)
+        for k in out:
+            want = np.asarray(out[k])[perm]
+            got = np.asarray(out_p[k])
+            assert np.array_equal(want, got), k
+
+    def test_rollout_rewards_match_reference_env(self):
+        """Replaying a vec-rollout's action sequence through PipelineEnv
+        yields the same rewards — the scan trajectory is a real episode."""
+        pipe, tables, params, traces, keys = self._setup()
+        n_steps = self.SECONDS // 10
+        out = vecenv.vec_rollout(params, tables, traces, keys,
+                                 n_steps=n_steps, weights=WEIGHTS)
+        for i in range(2):
+            env = PipelineEnv(pipe, np.asarray(traces[i], np.float64),
+                              seed=0)
+            env.reset()
+            for t in range(n_steps):
+                a = np.asarray(out["actions"][i, t])
+                _, r, _, _ = env.step(action_to_config(pipe, a))
+                assert np.isclose(r, float(out["rewards"][i, t]),
+                                  rtol=1e-4, atol=5e-2)
+
+
+class TestBatchEvaluation:
+    def test_greedy_eval_matches_run_episode(self):
+        """run_episodes_vectorized (greedy) reproduces the legacy
+        run_episode loop driving OPDPolicy on the same traces."""
+        from repro.core import OPDPolicy, run_episode, run_episodes_vectorized
+        pipe = api.get_pipeline("serve2").build()
+        params = init_policy(jax.random.PRNGKey(2), pipe.n_tasks * 9,
+                             head_sizes(pipe))
+        traces = np.stack([make_trace("steady_low", seed=i, seconds=100)
+                           for i in range(2)])
+        batch = run_episodes_vectorized(pipe, params, traces)
+        for i in range(2):
+            env = PipelineEnv(pipe, traces[i], seed=0)
+            legacy = run_episode(env, OPDPolicy(pipe, params, greedy=True))
+            assert np.allclose(batch["rewards"][i], legacy["reward"],
+                               rtol=1e-4, atol=5e-2)
+            assert np.allclose(batch["qos"][i], legacy["qos"],
+                               rtol=1e-4, atol=5e-2)
+
+
+class TestTrainerIntegration:
+    def _make_env_fn(self, pipe):
+        def make_env(seed):
+            return PipelineEnv(pipe, make_trace("fluctuating", seed=seed,
+                                                seconds=120), seed=seed)
+        return make_env
+
+    def test_vec_branch_updates_params(self):
+        pipe = api.get_pipeline("serve2").build()
+        tr = OPDTrainer(pipe, self._make_env_fn(pipe),
+                        ppo=PPOConfig(epochs=1, expert_freq=2), seed=0,
+                        num_envs=4)
+        assert tr._vec_ok
+        before = jax.tree.map(jnp.copy, tr.params)
+        tr.train_episode(1)                       # 1 % 2 != 0 -> vectorized
+        assert tr.history["expert"] == [False]
+        delta = jax.tree.reduce(
+            lambda a, b: a + b,
+            jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()),
+                         before, tr.params))
+        assert delta > 0
+        assert np.isfinite(tr.history["loss"]).all()
+
+    def test_expert_episode_falls_back_to_legacy(self):
+        pipe = api.get_pipeline("serve2").build()
+        tr = OPDTrainer(pipe, self._make_env_fn(pipe),
+                        ppo=PPOConfig(epochs=1, expert_freq=1), seed=0,
+                        num_envs=4)
+        tr.train_episode(1)                       # expert -> legacy loop
+        assert tr.history["expert"] == [True]
+        assert len(tr.expert_states) > 0
+
+
+class TestSessionReproducibility:
+    def _spec(self):
+        return api.ExperimentSpec(
+            pipeline=api.get_pipeline("serve2"),
+            scenario=api.replace(api.get_scenario("fluctuating"), rate=60.0,
+                                 seed=4, horizon=100),
+            controller=api.replace(api.get_controller("opd"),
+                                   train_episodes=2, train_seconds=120,
+                                   num_envs=2),
+            backend="analytic")
+
+    def test_num_envs_roundtrips_through_json(self):
+        spec = self._spec()
+        back = api.ExperimentSpec.from_dict(
+            json.loads(json.dumps(spec.to_dict())))
+        assert back == spec
+        assert back.controller.num_envs == 2
+
+    def test_train_bit_for_bit_from_serialized_spec(self):
+        """Acceptance (ISSUE 3): Session.train with num_envs > 1 is
+        bit-for-bit reproducible from a serialized ExperimentSpec."""
+        blob = json.dumps(self._spec().to_dict())
+
+        def params_of():
+            sess = api.Session.from_spec(blob)
+            sess.train()
+            return sess.trainer.params, list(sess.trainer.history["reward"])
+
+        p1, h1 = params_of()
+        p2, h2 = params_of()
+        assert h1 == h2
+        same = jax.tree.map(lambda a, b: bool((a == b).all()), p1, p2)
+        assert all(jax.tree.leaves(same))
