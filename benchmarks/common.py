@@ -48,12 +48,15 @@ def bench_args(argv=None, *, description: str | None = None,
     return args
 
 
-def bench_main(run, argv=None) -> None:
+def bench_main(run, argv=None, *, parser=None, kwargs_from_args=None) -> None:
     """Shared ``__main__`` driver: parse the common flags, invoke
-    ``run(quick=...)``, emit the benchmark,metric,value,reference CSV."""
-    args = bench_args(argv)
+    ``run(quick=...)``, emit the benchmark,metric,value,reference CSV.
+    Scripts with extra flags pass a pre-built ``parser`` plus
+    ``kwargs_from_args(args) -> dict`` to thread them into ``run``."""
+    args = bench_args(argv, parser=parser)
+    kwargs = kwargs_from_args(args) if kwargs_from_args else {}
     print("benchmark,metric,value,reference")
-    for r in run(quick=args.quick):
+    for r in run(quick=args.quick, **kwargs):
         print(",".join(str(x).replace(",", ";") for x in r))
 
 
@@ -72,20 +75,28 @@ def _np_default(o):
 
 
 def trained_opd(episodes: int = 36, *, seed: int = 0, force: bool = False,
-                log=print):
+                log=print, pipeline=None, cache_tag: str | None = None):
     """Train (or load cached) OPD policy on the paper's three workload
-    regimes, round-robin over episodes. Returns (params, trainer_history)."""
+    regimes, round-robin over episodes. Returns (params, trainer_history).
+
+    ``pipeline`` (a PipelineSpec; default the registered "paper-4stage")
+    selects the pipeline — pass a cluster-bearing spec for placement-aware
+    training, together with a distinct ``cache_tag`` (the policy's input
+    layout grows per-node features, so caches are not interchangeable)."""
     from repro import api
     from repro.cluster import PipelineEnv
     from repro.core import OPDTrainer, PPOConfig
 
-    if not force and os.path.exists(POLICY_CACHE):
-        with open(POLICY_CACHE, "rb") as f:
+    cache = (POLICY_CACHE if cache_tag is None else
+             os.path.join("experiments", f"opd_policy_{cache_tag}.pkl"))
+    if not force and os.path.exists(cache):
+        with open(cache, "rb") as f:
             blob = pickle.load(f)
         if blob.get("episodes", 0) >= episodes:
             return blob["params"], blob["history"]
 
-    pipe = api.get_pipeline("paper-4stage").build()
+    spec = pipeline or api.get_pipeline("paper-4stage")
+    pipe = spec.build()
     kinds = ("steady_low", "fluctuating", "steady_high")
 
     def make_env(seed_):
@@ -100,8 +111,8 @@ def trained_opd(episodes: int = 36, *, seed: int = 0, force: bool = False,
                 f"reward={tr.history['reward'][-1]:9.2f} "
                 f"loss={tr.history['loss'][-1]:8.4f} "
                 f"expert={tr.history['expert'][-1]}")
-    os.makedirs(os.path.dirname(POLICY_CACHE), exist_ok=True)
-    with open(POLICY_CACHE, "wb") as f:
+    os.makedirs(os.path.dirname(cache), exist_ok=True)
+    with open(cache, "wb") as f:
         pickle.dump({"params": tr.params, "history": tr.history,
                      "episodes": episodes}, f)
     return tr.params, tr.history

@@ -8,6 +8,11 @@ Paper claims validated here:
   fluctuating: OPD cost +37% vs greedy, QoS +21% vs greedy;
                vs IPA: cost -6%, QoS -3%
   steady_high: greedy/IPA/OPD converge to similar cost & QoS
+
+``--cluster NAME`` re-runs the sweep with the pipeline placed on a
+registered (heterogeneous) cluster topology — node speed factors, per-node
+feasibility and cross-node hops change the physics, so these rows carry no
+paper reference; the JSON lands in ``fig45_workloads_<cluster>.json``.
 """
 from __future__ import annotations
 
@@ -19,11 +24,14 @@ from repro import api
 EVAL_SEED = 77
 
 
-def _episode(kind, name, params):
+def _episode(kind, name, params, pipeline, horizon=None):
     """One workload cycle of controller ``name``, declared via repro.api."""
+    scen = api.replace(api.get_scenario(kind), seed=EVAL_SEED)
+    if horizon is not None:
+        scen = api.replace(scen, horizon=horizon)
     exp = api.ExperimentSpec(
-        pipeline=api.get_pipeline("paper-4stage"),
-        scenario=api.replace(api.get_scenario(kind), seed=EVAL_SEED),
+        pipeline=pipeline,
+        scenario=scen,
         controller=api.replace(api.get_controller(name), seed=EVAL_SEED),
         backend="analytic")
     sess = api.Session.from_spec(exp)
@@ -32,13 +40,22 @@ def _episode(kind, name, params):
     return sess.serve()
 
 
-def run(quick: bool = False):
-    params, _ = trained_opd(episodes=12 if quick else 36)
+def run(quick: bool = False, cluster: str | None = None):
+    pipeline = api.get_pipeline("paper-4stage")
+    if cluster:
+        pipeline = api.replace(pipeline, cluster=api.get_cluster(cluster))
+    params, _ = trained_opd(episodes=12 if quick else 36,
+                            pipeline=pipeline if cluster else None,
+                            cache_tag=cluster)
+    # the heterogeneous quick sweep is CI-sized: one regime, shorter cycle
+    kinds = (("fluctuating",) if cluster and quick
+             else ("steady_low", "fluctuating", "steady_high"))
+    horizon = 400 if cluster and quick else None
     rows, payload = [], {}
-    for kind in ("steady_low", "fluctuating", "steady_high"):
+    for kind in kinds:
         res = {}
         for name in ("random", "greedy", "ipa", "opd"):
-            ep = _episode(kind, name, params)
+            ep = _episode(kind, name, params, pipeline, horizon)
             cost = np.asarray(ep["cost"])
             qos = np.asarray(ep["qos"])
             res[name] = {"cost": float(cost.mean()),
@@ -48,25 +65,31 @@ def run(quick: bool = False):
                          "reward": float(np.mean(ep["rewards"]))}
         payload[kind] = res
         g, i, o = res["greedy"], res["ipa"], res["opd"]
+        bench = "fig45" if not cluster else f"fig45@{cluster}"
+
+        def ref(claims):
+            return "" if cluster else claims[kind]
+
         rows += [
-            ("fig45", f"{kind}.opd_cost_vs_greedy_pct",
+            (bench, f"{kind}.opd_cost_vs_greedy_pct",
              round(100 * (o["cost"] / max(g["cost"], 1e-9) - 1), 1),
-             {"steady_low": "+120%", "fluctuating": "+37%",
-              "steady_high": "~0%"}[kind]),
-            ("fig45", f"{kind}.opd_qos_vs_greedy_pct",
+             ref({"steady_low": "+120%", "fluctuating": "+37%",
+                  "steady_high": "~0%"})),
+            (bench, f"{kind}.opd_qos_vs_greedy_pct",
              round(100 * _rel(o["qos"], g["qos"]), 1),
-             {"steady_low": "+36%", "fluctuating": "+21%",
-              "steady_high": "~0%"}[kind]),
-            ("fig45", f"{kind}.opd_cost_vs_ipa_pct",
+             ref({"steady_low": "+36%", "fluctuating": "+21%",
+                  "steady_high": "~0%"})),
+            (bench, f"{kind}.opd_cost_vs_ipa_pct",
              round(100 * (o["cost"] / max(i["cost"], 1e-9) - 1), 1),
-             {"steady_low": "-16%", "fluctuating": "-6%",
-              "steady_high": "~0%"}[kind]),
-            ("fig45", f"{kind}.opd_qos_vs_ipa_pct",
+             ref({"steady_low": "-16%", "fluctuating": "-6%",
+                  "steady_high": "~0%"})),
+            (bench, f"{kind}.opd_qos_vs_ipa_pct",
              round(100 * _rel(o["qos"], i["qos"]), 1),
-             {"steady_low": "-3.8%", "fluctuating": "-3%",
-              "steady_high": "~0%"}[kind]),
+             ref({"steady_low": "-3.8%", "fluctuating": "-3%",
+                  "steady_high": "~0%"})),
         ]
-    save_results("fig45_workloads", payload)
+    save_results("fig45_workloads" + (f"_{cluster}" if cluster else ""),
+                 payload)
     return rows
 
 
@@ -76,6 +99,12 @@ def _rel(a: float, b: float) -> float:
 
 
 if __name__ == "__main__":
-    from benchmarks.common import bench_main
+    import argparse
 
-    bench_main(run)
+    from benchmarks.common import bench_main
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--cluster", default=None, choices=api.list_clusters(),
+                    help="place the pipeline on a registered cluster "
+                         "topology (default: homogeneous scalar pool)")
+    bench_main(run, parser=ap,
+               kwargs_from_args=lambda a: {"cluster": a.cluster})

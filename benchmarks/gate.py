@@ -11,6 +11,7 @@ gate passes when current >= min-ratio * baseline.
 
 import argparse
 import json
+import math
 import sys
 
 DEFAULT_METRIC = "vectorized.32.steps_per_s"
@@ -20,7 +21,16 @@ def lookup(payload: dict, dotted: str) -> float:
     node = payload
     for part in dotted.split("."):
         node = node[part]
-    return float(node)
+    if node is None:
+        raise SystemExit(
+            f"GATE ERROR: metric {dotted!r} is null (nothing was measured)"
+        )
+    value = float(node)
+    if math.isnan(value):
+        # a NaN silently loses every comparison — fail loudly instead of
+        # letting `ratio >= min_ratio` pass or fail by accident
+        raise SystemExit(f"GATE ERROR: metric {dotted!r} is NaN")
+    return value
 
 
 def load_metric(path: str, dotted: str) -> float:

@@ -38,15 +38,19 @@ def run(quick: bool = False):
         summary, wall = rep["summary"], rep["serve_wall_s"]
         effect_ms = [(d + a) * 1e3
                      for d, a in zip(rep["decide_wall_s"], apply_wall)]
+        def ms(v):
+            # summary percentiles are None (not NaN) when nothing completed
+            return None if v is None else v * 1e3
+
         res = {
             "submitted": summary["submitted"],
             "served": summary["served"],
             "virtual_rps": summary["throughput_rps"],
             "wall_rps": summary["served"] / max(wall, 1e-9),
             "sim_speedup_x": summary["virtual_now"] / max(wall, 1e-9),
-            "p50_ms": summary["p50"] * 1e3,
-            "p95_ms": summary["p95"] * 1e3,
-            "p99_ms": summary["p99"] * 1e3,
+            "p50_ms": ms(summary["p50"]),
+            "p95_ms": ms(summary["p95"]),
+            "p99_ms": ms(summary["p99"]),
             "mean_batch": summary["mean_batch_size"],
             "decision_to_effect_ms": float(np.mean(effect_ms)),
             "switches": switches,
@@ -58,7 +62,8 @@ def run(quick: bool = False):
              "served request rate in virtual time"),
             ("runtime", f"{name}.wall_rps", round(res["wall_rps"], 0),
              "event-loop processing rate"),
-            ("runtime", f"{name}.p95_ms", round(res["p95_ms"], 1),
+            ("runtime", f"{name}.p95_ms",
+             None if res["p95_ms"] is None else round(res["p95_ms"], 1),
              "tail latency under the greedy controller"),
             ("runtime", f"{name}.decision_to_effect_ms",
              round(res["decision_to_effect_ms"], 2),

@@ -66,12 +66,19 @@ wall = time.time() - wall0
 
 summary = report["summary"]
 submitted = summary["submitted"]
+
+
+def ms(v):
+    # summary latency fields are None (not NaN) when nothing completed
+    return "n/a" if v is None else f"{v * 1e3:.1f}ms"
+
+
 print(f"\nserved {summary['served']}/{submitted} requests "
       f"({summary['throughput_rps']:.1f} req/s virtual, "
       f"{summary['served'] / max(wall, 1e-9):.0f} req/s wall)")
-print(f"latency p50={summary['p50'] * 1e3:.1f}ms "
-      f"p95={summary['p95'] * 1e3:.1f}ms p99={summary['p99'] * 1e3:.1f}ms "
-      f"mean={summary['latency_mean_s'] * 1e3:.1f}ms")
+print(f"latency p50={ms(summary['p50'])} "
+      f"p95={ms(summary['p95'])} p99={ms(summary['p99'])} "
+      f"mean={ms(summary['latency_mean_s'])}")
 print(f"mean cost={np.mean(report['cost']):.1f} chips, "
       f"{summary['switches']} live variant switches, "
       f"mean batch={summary['mean_batch_size']:.1f}, "

@@ -6,12 +6,13 @@ built-ins (`get_pipeline("paper-4stage")`, `get_scenario("bursty")`,
 `get_controller("opd")`); the `Session` facade owns the env / runtime /
 predictor / policy lifecycle. See docs/API.md for the schema and quickstart.
 """
-from repro.api.specs import (ControllerSpec, ExperimentSpec, PipelineSpec,
-                             ScenarioSpec, replace)
+from repro.api.specs import (ClusterSpec, ControllerSpec, ExperimentSpec,
+                             NodeSpec, PipelineSpec, ScenarioSpec, replace)
 from repro.api.registry import (register_pipeline, register_scenario,
-                                register_controller, get_pipeline,
-                                get_scenario, get_controller,
-                                controller_factory, list_pipelines,
-                                list_scenarios, list_controllers)
+                                register_controller, register_cluster,
+                                get_pipeline, get_scenario, get_controller,
+                                get_cluster, controller_factory,
+                                list_pipelines, list_scenarios,
+                                list_controllers, list_clusters)
 from repro.api.session import Session, build_executors, run_experiment
 from repro.core.controller import Controller, ControllerBase, Observation, decide

@@ -16,11 +16,13 @@ from __future__ import annotations
 from repro.cluster.workloads import WORKLOADS
 from repro.serving.arrivals import SCENARIOS
 
-from repro.api.specs import ControllerSpec, PipelineSpec, ScenarioSpec
+from repro.api.specs import (ClusterSpec, ControllerSpec, NodeSpec,
+                             PipelineSpec, ScenarioSpec)
 
 _PIPELINES: dict[str, PipelineSpec] = {}
 _SCENARIOS: dict[str, ScenarioSpec] = {}
 _CONTROLLERS: dict[str, tuple[ControllerSpec, object]] = {}
+_CLUSTERS: dict[str, ClusterSpec] = {}
 
 
 # ---------------------------------------------------------------- pipelines --
@@ -61,6 +63,25 @@ def list_scenarios() -> tuple[str, ...]:
     return tuple(sorted(_SCENARIOS))
 
 
+# ----------------------------------------------------------------- clusters --
+
+def register_cluster(spec: ClusterSpec, *, name: str | None = None) -> ClusterSpec:
+    _CLUSTERS[name or spec.name] = spec
+    return spec
+
+
+def get_cluster(name: str) -> ClusterSpec:
+    try:
+        return _CLUSTERS[name]
+    except KeyError:
+        raise KeyError(f"unknown cluster {name!r}; "
+                       f"registered: {list_clusters()}") from None
+
+
+def list_clusters() -> tuple[str, ...]:
+    return tuple(sorted(_CLUSTERS))
+
+
 # -------------------------------------------------------------- controllers --
 
 def register_controller(name: str, factory, *,
@@ -88,6 +109,35 @@ def list_controllers() -> tuple[str, ...]:
 
 # ---------------------------------------------------------------- built-ins --
 
+def _register_builtin_clusters():
+    # the paper's cluster: one homogeneous scalar pool of W_max = 64 chips —
+    # the default every existing pipeline implicitly runs on
+    register_cluster(ClusterSpec(
+        name="homogeneous",
+        nodes=(NodeSpec("edge-0", capacity=64.0),)))
+    # a big/medium/small edge cell (EdgeSight-style heterogeneous fleet):
+    # same 64-chip total as the paper's pool, but fragmented across device
+    # classes with different service speeds and a 20 ms cross-node hop
+    register_cluster(ClusterSpec(
+        name="edge-hetero-3",
+        nodes=(NodeSpec("big", capacity=32.0, speed=1.25,
+                        device_class="server"),
+               NodeSpec("medium", capacity=20.0, speed=1.0,
+                        device_class="edge-box"),
+               NodeSpec("small", capacity=12.0, speed=0.7,
+                        device_class="device")),
+        hop_latency=0.02))
+    # a tightly constrained two-device cell: little total capacity, slow
+    # devices, expensive hops — placement pressure dominates every decision
+    register_cluster(ClusterSpec(
+        name="edge-constrained",
+        nodes=(NodeSpec("cell-a", capacity=12.0, speed=0.8,
+                        device_class="device"),
+               NodeSpec("cell-b", capacity=8.0, speed=0.6,
+                        device_class="device")),
+        hop_latency=0.05))
+
+
 def _register_builtin_pipelines():
     # the paper's 4-stage pipeline (perf_model.default_pipeline as data)
     register_pipeline(PipelineSpec(
@@ -109,6 +159,16 @@ def _register_builtin_pipelines():
                 ("llama3.2-1b", "starcoder2-3b"),
                 ("granite-moe-3b-a800m", "zamba2-2.7b")),
         quants=("bf16",)))
+    # the same 3-stage pipeline on the heterogeneous big/medium/small edge
+    # cell — placement-aware physics (node speeds, per-node feasibility,
+    # cross-node hops) and the per-node Eq. (5) state extension
+    register_pipeline(PipelineSpec(
+        name="serve3-hetero",
+        stages=(("xlstm-125m", "whisper-small"),
+                ("llama3.2-1b", "starcoder2-3b"),
+                ("granite-moe-3b-a800m", "zamba2-2.7b")),
+        quants=("bf16",),
+        cluster=_CLUSTERS["edge-hetero-3"]))
 
 
 def _register_builtin_scenarios():
@@ -138,6 +198,7 @@ def _register_builtin_controllers():
         "expert", lambda spec, pipe, params: ExpertPolicy(pipe))
 
 
+_register_builtin_clusters()
 _register_builtin_pipelines()
 _register_builtin_scenarios()
 _register_builtin_controllers()

@@ -15,6 +15,7 @@ from dataclasses import asdict, dataclass, replace  # noqa: F401
 
 import numpy as np
 
+from repro.cluster.topology import ClusterTopology, Node
 from repro.cluster.workloads import WORKLOADS, make_trace
 from repro.core.mdp import Pipeline
 from repro.serving.arrivals import ArrivalProcess, TraceArrivals, make_arrivals
@@ -23,34 +24,91 @@ DEFAULT_QUANTS = ("bf16", "int8", "int4")
 
 
 @dataclass(frozen=True)
+class NodeSpec:
+    """One edge device of a ClusterSpec, as data."""
+    name: str
+    capacity: float                  # chips this node contributes
+    speed: float = 1.0               # service-rate factor of its device class
+    device_class: str = "edge"
+
+    def build(self) -> Node:
+        return Node(name=self.name, capacity=self.capacity, speed=self.speed,
+                    device_class=self.device_class)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "NodeSpec":
+        return cls(name=d["name"], capacity=float(d["capacity"]),
+                   speed=float(d.get("speed", 1.0)),
+                   device_class=str(d.get("device_class", "edge")))
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """A cluster topology — heterogeneous edge nodes plus the cross-node hop
+    penalty — as JSON-round-trip data."""
+    name: str
+    nodes: tuple[NodeSpec, ...]
+    hop_latency: float = 0.0         # s per adjacent-stage cross-node hop
+
+    @property
+    def total_capacity(self) -> float:
+        return sum(n.capacity for n in self.nodes)
+
+    def build(self) -> ClusterTopology:
+        return ClusterTopology(name=self.name,
+                               nodes=tuple(n.build() for n in self.nodes),
+                               hop_latency=self.hop_latency)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ClusterSpec":
+        return cls(name=d["name"],
+                   nodes=tuple(NodeSpec.from_dict(n) for n in d["nodes"]),
+                   hop_latency=float(d.get("hop_latency", 0.0)))
+
+
+@dataclass(frozen=True)
 class PipelineSpec:
     """Stages × architectures × quantisation levels plus knob ranges —
-    everything ``perf_model.make_pipeline`` needs, as data."""
+    everything ``perf_model.make_pipeline`` needs, as data. ``cluster``
+    (None = the homogeneous scalar pool of capacity ``w_max``) selects the
+    cluster topology stage replicas are placed on; when set, the pipeline's
+    W_max is the topology's total capacity."""
     name: str
     stages: tuple[tuple[str, ...], ...]      # arch names per stage
     quants: tuple[str, ...] = DEFAULT_QUANTS
     f_max: int = 8
     b_max: int = 32
     w_max: float = 64.0
+    cluster: ClusterSpec | None = None
 
     def build(self) -> Pipeline:
         from repro.cluster.perf_model import make_pipeline
         from repro.configs import ARCHS
+        topology = self.cluster.build() if self.cluster else None
+        w_max = self.cluster.total_capacity if self.cluster else self.w_max
         return make_pipeline([[ARCHS[n] for n in names] for names in self.stages],
                              name=self.name, quants=self.quants,
                              f_max=self.f_max, b_max=self.b_max,
-                             w_max=self.w_max)
+                             w_max=w_max, topology=topology)
 
     def to_dict(self) -> dict:
         return asdict(self)
 
     @classmethod
     def from_dict(cls, d: dict) -> "PipelineSpec":
+        cluster = d.get("cluster")
         return cls(name=d["name"],
                    stages=tuple(tuple(s) for s in d["stages"]),
                    quants=tuple(d.get("quants", DEFAULT_QUANTS)),
                    f_max=int(d.get("f_max", 8)), b_max=int(d.get("b_max", 32)),
-                   w_max=float(d.get("w_max", 64.0)))
+                   w_max=float(d.get("w_max", 64.0)),
+                   cluster=ClusterSpec.from_dict(cluster) if cluster else None)
 
 
 @dataclass(frozen=True)

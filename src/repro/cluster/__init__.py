@@ -1,3 +1,5 @@
+from repro.cluster.topology import (ClusterTopology, Node, Placement,
+                                    PlacementCursor)
 from repro.cluster.workloads import make_trace, WORKLOADS
 from repro.cluster.perf_model import variant_from_arch, default_pipeline, make_pipeline
 from repro.cluster.env import (PipelineEnv, RuntimeEnv, ADAPTATION_INTERVAL,

@@ -24,8 +24,10 @@ import numpy as np
 from repro.cluster.monitor import Monitor
 from repro.core.controller import Observation
 from repro.core.mdp import (ADAPTATION_INTERVAL, COLD_START_FRACTION, Config,
-                            Pipeline, QoSWeights, accuracy_and_cost, evaluate,
-                            resource_usage, score_measurements, stage_latency)
+                            Pipeline, QoSWeights, accuracy_and_cost,
+                            analytic_pipeline_latency, evaluate, placement_for,
+                            resource_usage, resources_feasible,
+                            score_measurements)
 
 
 class _ConfigEnvBase:
@@ -38,8 +40,14 @@ class _ConfigEnvBase:
 
     @property
     def state_dim(self) -> int:
-        # per task: (u, p, m, l, t, z, f, b, c)  — Eq. (5)
-        return self.pipe.n_tasks * 9
+        # per task: (u, p, m, l, t, z, f, b, c)  — Eq. (5) — plus, on a
+        # heterogeneous topology, one free-capacity fraction per node so the
+        # feature extractor sees comprehensive node status
+        return self.pipe.n_tasks * (9 + self._n_node_features)
+
+    @property
+    def _n_node_features(self) -> int:
+        return 0 if self.pipe.scalar_pool else self.pipe.topo.n_nodes
 
     def _observe(self, cur: float | None = None,
                  pred: float | None = None) -> np.ndarray:
@@ -47,6 +55,13 @@ class _ConfigEnvBase:
         u = (pipe.w_max - resource_usage(pipe, cfg)) / pipe.w_max
         p = (self._current_load() if cur is None else cur) / 100.0
         m = (self._predicted_load() if pred is None else pred) / 100.0
+        if self._n_node_features:
+            pl = placement_for(pipe, cfg)
+            node_free = [(node.capacity - used) / node.capacity
+                         for node, used in zip(pipe.topo.nodes,
+                                               pl.node_usage)]
+        else:
+            node_free = []
         rows = []
         for n, task in enumerate(pipe.tasks):
             var = task.variants[cfg.z[n]]
@@ -58,7 +73,7 @@ class _ConfigEnvBase:
                 cfg.f[n] / pipe.f_max,
                 cfg.b[n] / pipe.b_max,
                 cfg.f[n] * var.cost / pipe.w_max,            # c_n
-            ])
+            ] + node_free)
         return np.asarray(rows, dtype=np.float32).reshape(-1)
 
     def _current_load(self) -> float:
@@ -125,7 +140,7 @@ class PipelineEnv(_ConfigEnvBase):
                 if switched.any() else 0.0)
         m = evaluate(self.pipe, action, demand, self.w, cold_frac=cold)
         r = m["reward"]
-        infeasible = resource_usage(self.pipe, action) > self.pipe.w_max
+        infeasible = not resources_feasible(self.pipe, action)
         if infeasible:
             r -= 50.0
 
@@ -219,14 +234,12 @@ class RuntimeEnv(_ConfigEnvBase):
         else:
             # nothing finished this interval (cold start / deep queues):
             # charge the analytic stage latency so the penalty stays smooth
-            L = sum(stage_latency(task.variants[action.z[n]], action.b[n],
-                                  action.f[n], max(demand, 1.0))
-                    for n, task in enumerate(self.pipe.tasks))
+            L = analytic_pipeline_latency(self.pipe, action, max(demand, 1.0))
         E = demand - T
         V, C = accuracy_and_cost(self.pipe, action)
         m = score_measurements(V, C, T, L, E, w, max_batch=max(action.b))
         r = m["reward"]
-        infeasible = resource_usage(self.pipe, action) > self.pipe.w_max
+        infeasible = not resources_feasible(self.pipe, action)
         if infeasible:
             r -= 50.0
 
@@ -241,9 +254,11 @@ class RuntimeEnv(_ConfigEnvBase):
         info = {"qos": m["qos"], "cost": m["C"], "latency": m["L"],
                 "throughput": m["T"], "excess": m["E"], "demand": demand,
                 "processed": completed, "infeasible": infeasible,
-                "switched": switched, "apply_wall_s": apply_wall_s,
+                "switched": switched, "migrations": rt.last_migrations,
+                "apply_wall_s": apply_wall_s,
                 "backlog": rt.in_system,
                 "queue_depths": rt.queue_depths(),
+                "node_utilization": rt.node_utilization(),
                 **tel.latency_percentiles(t0=t0, t1=t1)}
         return self._observe(), float(r), done, info
 

@@ -76,15 +76,18 @@ def variant_from_arch(cfg: ArchConfig, *, quant: str = "bf16",
 
 def make_pipeline(arch_cfgs: list[list[ArchConfig]], *, name: str = "pipeline",
                   f_max: int = 8, b_max: int = 32, w_max: float = 64.0,
-                  quants: tuple[str, ...] = ("bf16", "int8", "int4")) -> Pipeline:
-    """One Task per stage; variants = archs × quantisation levels."""
+                  quants: tuple[str, ...] = ("bf16", "int8", "int4"),
+                  topology=None) -> Pipeline:
+    """One Task per stage; variants = archs × quantisation levels.
+    ``topology`` (a ``cluster.topology.ClusterTopology``; None = homogeneous
+    scalar pool of capacity ``w_max``) places stage replicas on nodes."""
     tasks = []
     for i, cfgs in enumerate(arch_cfgs):
         variants = tuple(variant_from_arch(c, quant=q)
                          for c in cfgs for q in quants)
         tasks.append(Task(name=f"stage{i}", variants=variants))
     return Pipeline(name=name, tasks=tuple(tasks), f_max=f_max, b_max=b_max,
-                    w_max=w_max)
+                    w_max=w_max, topology=topology)
 
 
 def default_pipeline() -> Pipeline:

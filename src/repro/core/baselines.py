@@ -53,7 +53,7 @@ class GreedyPolicy(ControllerBase):
         demand = obs.predicted_load
         bc = pipe.batch_choices()
         z, f, b = [], [], []
-        budget = pipe.w_max
+        cursor = pipe.topo.cursor()     # placement-aware remaining capacity
         for task in pipe.tasks:
             # cheapest first, fastest (smallest beta) as tie-break — greedy is
             # quality-blind, exactly the paper's "minimise costs" baseline
@@ -63,7 +63,7 @@ class GreedyPolicy(ControllerBase):
             best = (1, bc[0])
             found = False
             for fi in range(1, pipe.f_max + 1):
-                if fi * var.resource > budget:
+                if not cursor.can_place(var.resource, fi):
                     break
                 for bi in bc:
                     if var.throughput(bi, fi) >= demand:
@@ -73,7 +73,7 @@ class GreedyPolicy(ControllerBase):
                 if found:
                     break
             fi, bi = best
-            budget -= fi * var.resource
+            cursor.place(var.resource, fi)
             z.append(zi)
             f.append(fi)
             b.append(bi)
@@ -94,15 +94,16 @@ class IPAPolicy(ControllerBase):
         self.acc_w = accuracy_weight
         self.decision_times: list[float] = []
 
-    def _solve_stage(self, var, demand, budget):
+    def _solve_stage(self, var, demand, cursor, reserve):
         """(f, b) meeting demand for a fixed variant, minimising stage
-        latency within ``budget`` — IPA overprovisions for QoS headroom
+        latency within the cluster's remaining placeable capacity (leaving
+        ``reserve`` for later stages) — IPA overprovisions for QoS headroom
         (the paper: "the most expensive, delivers the highest QoS"), or
         None if the variant cannot meet demand at all."""
         from repro.core.mdp import stage_latency
         best = None
         for fi in range(1, self.pipe.f_max + 1):
-            if fi * var.resource > budget:
+            if not cursor.can_place(var.resource, fi, reserve=reserve):
                 break
             for bi in self.pipe.batch_choices():
                 if var.throughput(bi, fi) >= demand:
@@ -119,18 +120,18 @@ class IPAPolicy(ControllerBase):
         variant_ranges = [range(len(t.variants)) for t in pipe.tasks]
         for zs in itertools.product(*variant_ranges):
             f, b, ok = [], [], True
-            budget = pipe.w_max
+            cursor = pipe.topo.cursor()
             for n, task in enumerate(pipe.tasks):
                 var = task.variants[zs[n]]
                 # leave an even budget share for the remaining stages
                 remaining = pipe.n_tasks - n - 1
                 reserve = remaining * min(v.resource for t in pipe.tasks[n + 1:]
                                           for v in t.variants) if remaining else 0.0
-                sol = self._solve_stage(var, demand, budget - reserve)
+                sol = self._solve_stage(var, demand, cursor, reserve)
                 if sol is None:
                     ok = False
                     break
-                budget -= sol[0] * var.resource
+                cursor.place(var.resource, sol[0])
                 f.append(sol[0])
                 b.append(sol[1])
             if not ok:

@@ -34,16 +34,18 @@ class ExpertPolicy(ControllerBase):
                       b=tuple(1 for _ in pipe.tasks))
 
     def _capacity_start(self, demand: float) -> Config:
-        """Cheapest (z, f, b) per stage whose throughput covers demand."""
+        """Cheapest (z, f, b) per stage whose throughput covers demand,
+        placed stage by stage through the shared placement scheduler (on a
+        scalar pool this is exactly the legacy remaining-budget loop)."""
         pipe = self.pipe
         bc = pipe.batch_choices()
         z, f, b = [], [], []
-        budget = pipe.w_max
+        cursor = pipe.topo.cursor()
         for task in pipe.tasks:
             best = None
             for zi, var in enumerate(task.variants):
                 for fi in range(1, pipe.f_max + 1):
-                    if fi * var.resource > budget:
+                    if not cursor.can_place(var.resource, fi):
                         break
                     for bi in bc:
                         if var.throughput(bi, fi) >= demand:
@@ -54,7 +56,7 @@ class ExpertPolicy(ControllerBase):
             if best is None:
                 best = (0, 0, 0, 1, 1)
             _, _, zi, fi, bi = best
-            budget -= fi * task.variants[zi].resource
+            cursor.place(task.variants[zi].resource, fi)
             z.append(zi), f.append(fi), b.append(bi)
         return Config(z=tuple(z), f=tuple(f), b=tuple(b))
 

@@ -9,12 +9,26 @@ Metrics (paper equations):
   Eq. (3)  Q = α·V + β·T − L − γ·E⁺ / − δ·(−E)⁻   QoS
   Eq. (4)  max  Q − λ·C   s.t. bounds + Σ w_n(z_n)·f_n ≤ W_max
   Eq. (7)  r = Q − β_c·C − γ_b·B                  RL reward
+
+The resource constraint has two regimes. With no explicit cluster topology
+(``Pipeline.topology is None``, or a single unit-speed node) the cluster is
+the paper's scalar pool: Σ w_n(z_n)·f_n ≤ W_max, and every formula below is
+bit-for-bit the historical behaviour. With a heterogeneous
+``cluster.topology.ClusterTopology``, feasibility and physics become
+*placement-aware*: replicas are bin-packed onto nodes by the deterministic
+first-fit scheduler, node speed factors scale each stage's service latency
+and throughput, and adjacent stages whose primary nodes differ pay the
+topology's cross-node hop latency.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
 
 import numpy as np
+
+if TYPE_CHECKING:                       # core must not import cluster at
+    from repro.cluster.topology import ClusterTopology, Placement  # runtime
 
 ADAPTATION_INTERVAL = 10          # seconds between decisions (paper §VI-B)
 COLD_START_FRACTION = 0.3         # capacity lost in the interval after a switch
@@ -54,10 +68,27 @@ class Pipeline:
     f_max: int = 8
     b_max: int = 32
     w_max: float = 64.0      # total device resource capacity W_max
+    # None = the legacy homogeneous scalar pool of capacity w_max
+    topology: "ClusterTopology | None" = field(default=None)
 
     @property
     def n_tasks(self) -> int:
         return len(self.tasks)
+
+    @property
+    def scalar_pool(self) -> bool:
+        """True when resources behave as the paper's single scalar pool
+        (no topology, or a trivial single-node unit-speed one)."""
+        return self.topology is None or self.topology.trivial
+
+    @property
+    def topo(self) -> "ClusterTopology":
+        """The cluster topology, materializing the implicit homogeneous
+        single-node one when none was declared."""
+        if self.topology is not None:
+            return self.topology
+        from repro.cluster.topology import ClusterTopology
+        return ClusterTopology.homogeneous(self.w_max)
 
     def batch_choices(self) -> list[int]:
         out, b = [], 1
@@ -90,15 +121,35 @@ class Config:
         return np.array([self.z, self.f, self.b], dtype=np.int64).T   # [N, 3]
 
 
-def stage_latency(var: ModelVariant, b: int, f: int, demand: float) -> float:
+def stage_latency(var: ModelVariant, b: int, f: int, demand: float, *,
+                  speed_sum: float | None = None,
+                  min_speed: float = 1.0) -> float:
     """End-to-end stage latency: batch-assembly wait (time to fill a batch of
     b at arrival rate demand/f per replica) + queue-aware service time
-    (M/M/1-style 1/(1-ρ) inflation as utilisation approaches capacity)."""
-    service = var.latency(b)
+    (M/M/1-style 1/(1-ρ) inflation as utilisation approaches capacity).
+
+    Placement-aware form: ``speed_sum`` (Σ node speed over the stage's
+    replicas) replaces the plain replica count in the throughput term, and
+    ``min_speed`` (the slowest node hosting a replica) stretches the service
+    time — the slowest device dominates the tail. The defaults reproduce the
+    homogeneous arithmetic exactly."""
+    service = var.latency(b) / min_speed
     wait = min(b * f / max(demand, 1e-6), 2.0)
-    rho = demand / max(var.throughput(b, f), 1e-9)
+    if speed_sum is None:
+        thr = var.throughput(b, f)
+    else:
+        thr = speed_sum * b / var.latency(b)
+    rho = demand / max(thr, 1e-9)
     congestion = 1.0 / max(1.0 - rho, 0.1)
     return wait + service * congestion
+
+
+def placement_for(pipe: Pipeline, cfg: Config) -> "Placement":
+    """The deterministic placement of ``cfg``'s replicas on the pipeline's
+    cluster topology (memoized per (topology, resources, replicas))."""
+    res = tuple(task.variants[cfg.z[n]].resource
+                for n, task in enumerate(pipe.tasks))
+    return pipe.topo.place(res, cfg.f)
 
 
 def pipeline_metrics(pipe: Pipeline, cfg: Config, demand: float,
@@ -110,20 +161,55 @@ def pipeline_metrics(pipe: Pipeline, cfg: Config, demand: float,
                Prometheus monitor reports; used in the QoS (Eq. 3) T term;
     E        = demand - capacity (positive -> unmet load, negative -> spare);
     cold_frac degrades capacity (variant-switch cold start).
+
+    On a heterogeneous topology the stage physics are placement-aware: node
+    speed factors scale service latency and throughput, and each adjacent
+    stage pair whose primary nodes differ adds ``topo.hop_latency`` to L.
     """
     V = C = L = 0.0
     capacity = float("inf")
-    for n, task in enumerate(pipe.tasks):
-        var = task.variants[cfg.z[n]]
-        f, b = cfg.f[n], cfg.b[n]
-        V += var.accuracy
-        C += f * var.cost
-        L += stage_latency(var, b, f, demand)
-        capacity = min(capacity, var.throughput(b, f))
+    if pipe.scalar_pool:
+        for n, task in enumerate(pipe.tasks):
+            var = task.variants[cfg.z[n]]
+            f, b = cfg.f[n], cfg.b[n]
+            V += var.accuracy
+            C += f * var.cost
+            L += stage_latency(var, b, f, demand)
+            capacity = min(capacity, var.throughput(b, f))
+    else:
+        pl = placement_for(pipe, cfg)
+        for n, task in enumerate(pipe.tasks):
+            var = task.variants[cfg.z[n]]
+            f, b = cfg.f[n], cfg.b[n]
+            V += var.accuracy
+            C += f * var.cost
+            L += stage_latency(var, b, f, demand,
+                               speed_sum=pl.stage_speed_sum[n],
+                               min_speed=pl.stage_min_speed[n])
+            capacity = min(capacity,
+                           pl.stage_speed_sum[n] * b / var.latency(b))
+        L += pipe.topo.hop_latency * pl.n_hops
     capacity *= (1.0 - cold_frac)
     E = demand - capacity
     T_meas = min(demand, capacity)
     return V, C, T_meas, L, E, capacity
+
+
+def analytic_pipeline_latency(pipe: Pipeline, cfg: Config,
+                              demand: float) -> float:
+    """Closed-form end-to-end latency of the pipeline (the L term of
+    ``pipeline_metrics`` alone) — the runtime env's smooth fallback when an
+    interval completes no requests."""
+    if pipe.scalar_pool:
+        return sum(stage_latency(task.variants[cfg.z[n]], cfg.b[n], cfg.f[n],
+                                 demand)
+                   for n, task in enumerate(pipe.tasks))
+    pl = placement_for(pipe, cfg)
+    L = sum(stage_latency(task.variants[cfg.z[n]], cfg.b[n], cfg.f[n], demand,
+                          speed_sum=pl.stage_speed_sum[n],
+                          min_speed=pl.stage_min_speed[n])
+            for n, task in enumerate(pipe.tasks))
+    return L + pipe.topo.hop_latency * pl.n_hops
 
 
 def resource_usage(pipe: Pipeline, cfg: Config) -> float:
@@ -131,8 +217,16 @@ def resource_usage(pipe: Pipeline, cfg: Config) -> float:
                for n, task in enumerate(pipe.tasks))
 
 
+def resources_feasible(pipe: Pipeline, cfg: Config) -> bool:
+    """The resource constraint alone: scalar pool -> Σ w·f ≤ W_max;
+    heterogeneous topology -> every replica found a node (no overflow)."""
+    if pipe.scalar_pool:
+        return resource_usage(pipe, cfg) <= pipe.w_max
+    return placement_for(pipe, cfg).feasible
+
+
 def feasible(pipe: Pipeline, cfg: Config) -> bool:
-    if resource_usage(pipe, cfg) > pipe.w_max:
+    if not resources_feasible(pipe, cfg):
         return False
     for n in range(pipe.n_tasks):
         if not (0 <= cfg.z[n] < len(pipe.tasks[n].variants)):

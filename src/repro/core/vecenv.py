@@ -36,7 +36,12 @@ from repro.core.policy import apply_policy, sample_action
 
 class PipelineTables(NamedTuple):
     """A ``Pipeline``'s static physics as arrays ([N, V_max] per-variant
-    attributes, padded by repeating each task's last variant)."""
+    attributes, padded by repeating each task's last variant).
+
+    The cluster topology is precomputed into arrays too: ``node_capacity`` /
+    ``node_speed`` are **empty** ([0]) for a trivial (scalar-pool) topology —
+    the empty shape is the static signal that ``step``/``observe`` take the
+    legacy bit-for-bit code path and skip placement entirely."""
     accuracy: jax.Array      # [N, V]  v_n(z)
     cost: jax.Array          # [N, V]  c_n(z)
     resource: jax.Array      # [N, V]  w_n(z)
@@ -47,10 +52,19 @@ class PipelineTables(NamedTuple):
     f_max: jax.Array         # scalar
     b_max: jax.Array         # scalar
     w_max: jax.Array         # scalar W_max
+    node_capacity: jax.Array  # [K]    chips per node ([0] -> scalar pool)
+    node_speed: jax.Array    # [K]     per-node service-rate factor
+    hop_latency: jax.Array   # scalar  s per adjacent-stage cross-node hop
+    replica_slots: jax.Array  # [f_max] static replica-slot index (loop bound)
 
     @property
     def n_tasks(self) -> int:
         return self.accuracy.shape[0]
+
+    @property
+    def n_nodes(self) -> int:
+        """Static node count; 0 means trivial topology (legacy physics)."""
+        return self.node_capacity.shape[0]
 
 
 class EnvState(NamedTuple):
@@ -71,6 +85,17 @@ def tables_from_pipeline(pipe: Pipeline) -> PipelineTables:
             rows.append(vals + [vals[-1]] * (v_max - len(vals)))
         return jnp.asarray(np.asarray(rows, np.float32))
 
+    if pipe.scalar_pool:
+        node_capacity = jnp.zeros((0,), jnp.float32)
+        node_speed = jnp.zeros((0,), jnp.float32)
+        hop = jnp.float32(0.0)
+    else:
+        topo = pipe.topo
+        node_capacity = jnp.asarray([n.capacity for n in topo.nodes],
+                                    jnp.float32)
+        node_speed = jnp.asarray([n.speed for n in topo.nodes], jnp.float32)
+        hop = jnp.float32(topo.hop_latency)
+
     return PipelineTables(
         accuracy=tab("accuracy"), cost=tab("cost"), resource=tab("resource"),
         alpha=tab("alpha"), beta=tab("beta"),
@@ -78,7 +103,9 @@ def tables_from_pipeline(pipe: Pipeline) -> PipelineTables:
                                jnp.int32),
         batch_choices=jnp.asarray(pipe.batch_choices(), jnp.int32),
         f_max=jnp.float32(pipe.f_max), b_max=jnp.float32(pipe.b_max),
-        w_max=jnp.float32(pipe.w_max))
+        w_max=jnp.float32(pipe.w_max),
+        node_capacity=node_capacity, node_speed=node_speed, hop_latency=hop,
+        replica_slots=jnp.arange(pipe.f_max, dtype=jnp.int32))
 
 
 def init_state(tables: PipelineTables) -> EnvState:
@@ -104,10 +131,52 @@ def _gather(table: jax.Array, z: jax.Array) -> jax.Array:
     return jnp.take_along_axis(table, z[:, None], axis=1)[:, 0]
 
 
+def _placement(tables: PipelineTables, z: jax.Array, f: jax.Array):
+    """The jnp twin of ``cluster.topology``'s first-fit scheduler, taking
+    identical discrete decisions (capacities and per-replica resources are
+    integral chip counts, so every comparison is exact in float32).
+
+    Unrolled over the static (n_tasks × f_max) replica slots; inactive slots
+    (r >= f_n) are masked out. Returns per-stage (speed_sum, min_speed,
+    primary node), the total placement ``overflow`` and the per-node
+    remaining capacity."""
+    res = _gather(tables.resource, z)             # [N]
+    K = tables.n_nodes
+    R = tables.replica_slots.shape[0]
+    rem = tables.node_capacity
+    speed = tables.node_speed
+    overflow = jnp.float32(0.0)
+    speed_sums, min_speeds, primaries = [], [], []
+    for i in range(tables.n_tasks):
+        w = res[i]
+        s_sum = jnp.float32(0.0)
+        s_min = jnp.float32(jnp.inf)
+        counts = jnp.zeros(K, jnp.int32)
+        for r in range(R):
+            active = r < f[i]
+            fits = rem >= w
+            idx = jnp.where(jnp.any(fits), jnp.argmax(fits), jnp.argmax(rem))
+            take = jnp.minimum(w, rem[idx])
+            amt = jnp.where(active, jnp.float32(1.0), jnp.float32(0.0))
+            rem = rem.at[idx].add(-take * amt)
+            overflow = overflow + (w - take) * amt
+            s_sum = s_sum + speed[idx] * amt
+            s_min = jnp.where(active, jnp.minimum(s_min, speed[idx]), s_min)
+            counts = counts.at[idx].add(active.astype(jnp.int32))
+        speed_sums.append(s_sum)
+        min_speeds.append(jnp.where(jnp.isfinite(s_min), s_min, 1.0))
+        primaries.append(jnp.argmax(counts))
+    speed_sum = jnp.stack(speed_sums)
+    min_speed = jnp.stack(min_speeds)
+    primary = jnp.stack(primaries)
+    return speed_sum, min_speed, primary, overflow, rem
+
+
 def observe(tables: PipelineTables, state: EnvState,
             trace: jax.Array) -> jax.Array:
-    """Eq. (5) observation [N * 9]; predicted load = current load (the
-    training envs attach no external predictor)."""
+    """Eq. (5) observation [N * 9] (plus one per-node free-capacity fraction
+    per task row on a heterogeneous topology); predicted load = current load
+    (the training envs attach no external predictor)."""
     z, f, b = state.z, state.f.astype(jnp.float32), state.b.astype(jnp.float32)
     res = _gather(tables.resource, z)
     usage = jnp.sum(res * f)
@@ -127,6 +196,11 @@ def observe(tables: PipelineTables, state: EnvState,
         b / tables.b_max,
         f * _gather(tables.cost, z) / tables.w_max,
     ], axis=1)
+    if tables.n_nodes:                 # node status columns (heterogeneous)
+        _, _, _, _, rem = _placement(tables, z, state.f)
+        node_free = rem / tables.node_capacity
+        rows = jnp.concatenate(
+            [rows, jnp.tile(node_free[None, :], (n, 1))], axis=1)
     return rows.reshape(-1).astype(jnp.float32)
 
 
@@ -139,7 +213,8 @@ def step(tables: PipelineTables, state: EnvState, action: jax.Array,
     metrics)."""
     w = weights
     z, f, b = decode_action(tables, action)
-    fb = f.astype(jnp.float32) * b.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    fb = f.astype(jnp.float32) * bf
 
     s0 = state.t * ADAPTATION_INTERVAL
     window = jax.lax.dynamic_slice(trace, (s0,), (ADAPTATION_INTERVAL,))
@@ -152,15 +227,26 @@ def step(tables: PipelineTables, state: EnvState, action: jax.Array,
     cost = _gather(tables.cost, z)
     res = _gather(tables.resource, z)
     lat = _gather(tables.alpha, z) + _gather(tables.beta, z) * b
-    thr = fb / lat
 
     v_sum = jnp.sum(acc)
     c_sum = jnp.sum(cost * f)
     # stage_latency: batch-assembly wait + M/M/1-style congested service
     wait = jnp.minimum(fb / jnp.maximum(demand, 1e-6), 2.0)
+    if tables.n_nodes == 0:            # scalar pool — legacy physics
+        thr = fb / lat
+        lat_eff = lat
+        hop_total = jnp.float32(0.0)
+        infeasible = jnp.sum(res * f) > tables.w_max
+    else:                              # placement-aware physics
+        speed_sum, min_speed, primary, overflow, _ = _placement(tables, z, f)
+        thr = speed_sum * bf / lat
+        lat_eff = lat / min_speed
+        n_hops = jnp.sum((primary[:-1] != primary[1:]).astype(jnp.float32))
+        hop_total = tables.hop_latency * n_hops
+        infeasible = overflow > 0
     rho = demand / jnp.maximum(thr, 1e-9)
     congestion = 1.0 / jnp.maximum(1.0 - rho, 0.1)
-    lat_total = jnp.sum(wait + lat * congestion)
+    lat_total = jnp.sum(wait + lat_eff * congestion) + hop_total
 
     capacity = jnp.min(thr) * (1.0 - cold)
     excess = demand - capacity
@@ -169,7 +255,6 @@ def step(tables: PipelineTables, state: EnvState, action: jax.Array,
     qos = (w.alpha * v_sum + w.beta * t_meas - lat_total
            - jnp.where(excess >= 0, w.gamma * excess, w.delta * (-excess)))
     reward = qos - w.beta_c * c_sum - w.gamma_b * jnp.max(b)
-    infeasible = jnp.sum(res * f) > tables.w_max
     reward = reward - 50.0 * infeasible
 
     new_state = EnvState(t=state.t + 1, z=z, f=f, b=b)

@@ -5,7 +5,8 @@ data plane the OPD controller manages — plus the event-driven pipeline mode.
         [--batch 4] [--context 128] [--tokens 32]
 
     PYTHONPATH=src python -m repro.launch.serve --pipeline \
-        [--scenario bursty] [--horizon 120] [--policy greedy] [--seed 3]
+        [--scenario bursty] [--horizon 120] [--policy greedy] [--seed 3] \
+        [--cluster edge-hetero-3]
 
 Single-arch mode runs prefill once to populate the cache, then streams
 decode steps; on TPU the same serve_step is what launch/dryrun.py compiles
@@ -28,11 +29,22 @@ from repro.configs import ARCHS
 from repro.models import api
 
 
+def _ms(v) -> str:
+    """Milliseconds formatter, null-safe (summary emits None when nothing
+    completed)."""
+    return "n/a" if v is None else f"{v * 1e3:.0f}ms"
+
+
 def run_pipeline(args):
     from repro import api
 
+    pipeline = api.get_pipeline("serve2")
+    if args.cluster:
+        # place the pipeline on a registered (possibly heterogeneous)
+        # cluster topology instead of the homogeneous scalar pool
+        pipeline = api.replace(pipeline, cluster=api.get_cluster(args.cluster))
     exp = api.ExperimentSpec(
-        pipeline=api.get_pipeline("serve2"),
+        pipeline=pipeline,
         scenario=api.replace(api.get_scenario(args.scenario), rate=args.rate,
                              seed=args.seed, horizon=args.horizon),
         controller=api.replace(api.get_controller(args.policy),
@@ -41,14 +53,22 @@ def run_pipeline(args):
     sess.train(log=print)
 
     def show(env, cfg, info):
-        print(f"t={env.runtime.now:5.0f}s z={cfg.z} f={cfg.f} b={cfg.b} "
-              f"demand={info['demand']:5.1f}/s served={info['processed']:4d} "
-              f"p95={info['p95'] * 1e3:7.1f}ms backlog={info['backlog']}")
+        line = (f"t={env.runtime.now:5.0f}s z={cfg.z} f={cfg.f} b={cfg.b} "
+                f"demand={info['demand']:5.1f}/s served={info['processed']:4d} "
+                f"p95={info['p95'] * 1e3:7.1f}ms backlog={info['backlog']}")
+        if args.cluster:
+            line += (" nodes=" + "/".join(f"{u:.2f}"
+                                          for u in info["node_utilization"])
+                     + f" migrations={info['migrations']}")
+        print(line)
 
     s = sess.serve(on_step=show)["summary"]
     print(f"served {s['served']} requests ({s['throughput_rps']:.1f} req/s) "
-          f"p50={s['p50'] * 1e3:.0f}ms p95={s['p95'] * 1e3:.0f}ms "
-          f"p99={s['p99'] * 1e3:.0f}ms")
+          f"p50={_ms(s['p50'])} p95={_ms(s['p95'])} p99={_ms(s['p99'])}")
+    if args.cluster:
+        print(f"cluster {args.cluster}: "
+              f"{s['migrations']} replica migrations, node utilization "
+              + " ".join(f"{u:.2f}" for u in s.get("node_utilization", [])))
 
 
 def main():
@@ -62,9 +82,12 @@ def main():
     ap.add_argument("--pipeline", action="store_true",
                     help="serve an arrival scenario through the event-driven "
                          "pipeline runtime instead of single-arch decode")
-    from repro.api import list_controllers, list_scenarios
+    from repro.api import list_clusters, list_controllers, list_scenarios
     ap.add_argument("--scenario", default="bursty", choices=list_scenarios())
     ap.add_argument("--policy", default="greedy", choices=list_controllers())
+    ap.add_argument("--cluster", default=None, choices=list_clusters(),
+                    help="place the pipeline on a registered cluster "
+                         "topology (default: homogeneous scalar pool)")
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--horizon", type=int, default=120)
     ap.add_argument("--rate", type=float, default=25.0)

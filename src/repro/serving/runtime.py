@@ -26,7 +26,7 @@ import itertools
 
 import numpy as np
 
-from repro.core.mdp import Config, Pipeline, Task
+from repro.core.mdp import Config, Pipeline, Task, placement_for
 from repro.serving.batcher import ContinuousBatcher, Request, stack_tokens
 from repro.serving.telemetry import Telemetry
 
@@ -39,7 +39,12 @@ DEFAULT_MAX_WAIT = 0.25   # s a request may wait before a partial batch fires
 class RuntimeStage:
     """One pipeline stage: variant timing models, a continuous batcher and a
     replica pool. ``executor(z, tokens[B, S]) -> outputs [B, S]`` optionally
-    runs a real model; otherwise stage output = input tokens."""
+    runs a real model; otherwise stage output = input tokens.
+
+    Replicas live on cluster nodes (``replica_nodes`` / ``replica_speeds``
+    from the placement scheduler): a dispatch claims the fastest free
+    replica, whose node speed scales the batch's service time and whose node
+    is charged the replica-seconds."""
 
     def __init__(self, name: str, task: Task, *, z: int = 0, replicas: int = 1,
                  batch_size: int = 1, max_wait: float = DEFAULT_MAX_WAIT,
@@ -48,10 +53,13 @@ class RuntimeStage:
         self.task = task
         self.z = int(z) % len(task.variants)
         self.replicas = max(1, int(replicas))
+        self.replica_nodes: tuple[int, ...] = (0,) * self.replicas
+        self.replica_speeds: tuple[float, ...] = (1.0,) * self.replicas
         self.batcher = ContinuousBatcher(batch_size, max_wait=max_wait)
         self.seq_len = seq_len
         self.executor = executor
         self.in_flight = 0
+        self._busy: set[int] = set()  # replica indices currently serving
         self.blocked_until = 0.0      # cold-start gate (virtual s)
         self.busy_time = 0.0          # Σ replica-seconds of service charged
         self.served = 0
@@ -64,28 +72,60 @@ class RuntimeStage:
     def var(self):
         return self.task.variants[self.z]
 
-    def service_time(self, batch: int) -> float:
-        return self.var.latency(batch)
+    def service_time(self, batch: int, speed: float = 1.0) -> float:
+        return self.var.latency(batch) / speed
 
-    def set_replicas(self, replicas: int, now: float):
+    def claim_replica(self) -> int:
+        """The fastest free replica index (ties -> lowest index). Callers
+        must hold ``in_flight < replicas``, which guarantees a free one."""
+        free = [r for r in range(self.replicas) if r not in self._busy]
+        idx = max(free, key=lambda r: (self.replica_speeds[r], -r))
+        self._busy.add(idx)
+        return idx
+
+    def release_replica(self, idx: int):
+        self._busy.discard(idx)
+
+    def set_replicas(self, replicas: int, now: float,
+                     nodes: tuple[int, ...] | None = None,
+                     speeds: tuple[float, ...] | None = None):
         self._cap_accum += (now - self._cap_since) * self.replicas
         self._cap_since = now
         self.replicas = max(1, int(replicas))
+        self.replica_nodes = (tuple(nodes) if nodes is not None
+                              else (0,) * self.replicas)
+        self.replica_speeds = (tuple(speeds) if speeds is not None
+                               else (1.0,) * self.replicas)
 
     def replica_seconds(self, now: float) -> float:
         return self._cap_accum + (now - self._cap_since) * self.replicas
 
 
 class ServingRuntime:
-    def __init__(self, stages: list[RuntimeStage], *, telemetry: Telemetry | None = None):
+    def __init__(self, stages: list[RuntimeStage], *,
+                 telemetry: Telemetry | None = None, pipe: Pipeline | None = None):
         self.stages = stages
         self.telemetry = telemetry or Telemetry()
         self.now = 0.0
         self.completed: list[Request] = []
         self.in_system = 0            # arrived, not yet fully served
         self.switch_count = 0
+        self.migration_count = 0      # replicas moved across nodes by reconfigs
+        self.last_migrations = 0
         self._heap: list[tuple[float, int, str, object]] = []
         self._seq = itertools.count()
+        # cluster topology: placement charges replica-seconds per node and
+        # adjacent stages on different primary nodes pay a transfer hop
+        self.pipe = pipe
+        self.topo = pipe.topo if pipe is not None else None
+        n_nodes = self.topo.n_nodes if self.topo is not None else 1
+        self.node_busy = [0.0] * n_nodes
+        self._node_repl = [0] * n_nodes
+        self._node_accum = [0.0] * n_nodes
+        self._node_since = 0.0
+        self._primary = tuple(0 for _ in stages)
+        if pipe is not None:
+            self._install_placement(placement_for(pipe, self.config))
 
     # ----------------------------------------------------------- set-up --
 
@@ -94,7 +134,8 @@ class ServingRuntime:
                       max_wait: float = DEFAULT_MAX_WAIT, seq_len: int = 32,
                       executors: list | None = None) -> "ServingRuntime":
         """Stages mirror ``pipe``'s tasks; initial knobs from ``cfg``
-        (default: cheapest variant, 1 replica, batch 1)."""
+        (default: cheapest variant, 1 replica, batch 1). Replicas are placed
+        on ``pipe``'s cluster topology by the shared first-fit scheduler."""
         if cfg is None:
             n = pipe.n_tasks
             cfg = Config(z=(0,) * n, f=(1,) * n, b=(1,) * n)
@@ -105,7 +146,24 @@ class ServingRuntime:
                          executor=executors[i] if executors else None)
             for i, task in enumerate(pipe.tasks)
         ]
-        return cls(stages)
+        return cls(stages, pipe=pipe)
+
+    def _install_placement(self, pl):
+        """Point every stage's replica pool at its assigned nodes and roll
+        the per-node replica-seconds integral forward."""
+        speeds = [n.speed for n in self.topo.nodes]
+        for k in range(len(self._node_repl)):
+            self._node_accum[k] += ((self.now - self._node_since)
+                                    * self._node_repl[k])
+        self._node_since = self.now
+        counts = [0] * len(self._node_repl)
+        for stage, nodes in zip(self.stages, pl.nodes):
+            stage.replica_nodes = tuple(nodes)
+            stage.replica_speeds = tuple(speeds[k] for k in nodes)
+            for k in nodes:
+                counts[k] += 1
+        self._node_repl = counts
+        self._primary = pl.primary
 
     def load(self, process, horizon: float, *, vocab: int = 256,
              seq_len: int | None = None, rid_base: int = 0) -> int:
@@ -129,8 +187,14 @@ class ServingRuntime:
                      cold_start: float = COLD_START_SECONDS) -> int:
         """Live reconfiguration (the OPD action). Variant switches pay
         ``cold_start`` virtual seconds of stage unavailability; queued
-        requests hold (nothing is dropped). Returns #stages switched."""
+        requests hold (nothing is dropped). Replicas are re-placed on the
+        cluster by the shared scheduler; ``last_migrations`` reports how many
+        continuing replicas had to move nodes. Returns #stages switched."""
         switched = 0
+        pl = None
+        if self.pipe is not None:
+            old_nodes = [s.replica_nodes for s in self.stages]
+            pl = placement_for(self.pipe, cfg)
         for n, stage in enumerate(self.stages):
             z_new = int(cfg.z[n]) % len(stage.task.variants)
             if z_new != stage.z:
@@ -140,6 +204,12 @@ class ServingRuntime:
                                           self.now + cold_start)
             stage.set_replicas(int(cfg.f[n]), self.now)
             stage.batcher.batch_size = max(1, int(cfg.b[n]))
+        if pl is not None:
+            self._install_placement(pl)
+            self.last_migrations = sum(
+                _migrations(old, stage.replica_nodes)
+                for old, stage in zip(old_nodes, self.stages))
+            self.migration_count += self.last_migrations
         self.switch_count += switched
         self.telemetry.record_reconfig(self.now, switched)
         for i in range(len(self.stages)):
@@ -168,6 +238,8 @@ class ServingRuntime:
                 self._on_complete(*payload)
             elif kind == "timer":
                 self._on_timer(payload)
+            elif kind == "xfer":
+                self._on_xfer(*payload)
         self.now = max(self.now, t_end)
 
     def drain(self):
@@ -189,9 +261,11 @@ class ServingRuntime:
             stage._pending_timer = None
         self._poke(i)
 
-    def _on_complete(self, i: int, reqs: list[Request], z: int):
+    def _on_complete(self, i: int, reqs: list[Request], z: int,
+                     replica: int = 0):
         stage = self.stages[i]
         stage.in_flight -= 1
+        stage.release_replica(replica)
         stage.served += len(reqs)
         if stage.executor is not None:
             out = np.asarray(stage.executor(
@@ -204,18 +278,28 @@ class ServingRuntime:
                 req.stage_outputs.append(req.tokens)
                 req.result = req.tokens
         if i + 1 < len(self.stages):
-            nxt = self.stages[i + 1]
             for req in reqs:
                 # next stage consumes this stage's output tokens
                 req.tokens = np.asarray(req.result, dtype=np.int32).reshape(-1)
-                nxt.batcher.put(req, self.now)
-            self._poke(i + 1)
+            hop = self.topo.hop_latency if self.topo is not None else 0.0
+            if hop > 0.0 and self._primary[i] != self._primary[i + 1]:
+                # cross-node transfer: the batch reaches the next stage's
+                # queue only after the network hop
+                self._push(self.now + hop, "xfer", (i + 1, reqs))
+            else:
+                self._on_xfer(i + 1, reqs)
         else:
             for req in reqs:
                 req.finish = self.now
                 self.telemetry.record_completion(req.rid, req.arrival, self.now)
                 self.completed.append(req)
             self.in_system -= len(reqs)
+        self._poke(i)
+
+    def _on_xfer(self, i: int, reqs: list[Request]):
+        nxt = self.stages[i]
+        for req in reqs:
+            nxt.batcher.put(req, self.now)
         self._poke(i)
 
     def _poke(self, i: int):
@@ -226,14 +310,20 @@ class ServingRuntime:
                and self.now >= stage.blocked_until - 1e-12
                and stage.batcher.ready(self.now)):
             reqs = stage.batcher.pop(self.now)
-            service = stage.service_time(len(reqs))
+            replica = stage.claim_replica()
+            service = stage.service_time(len(reqs),
+                                         stage.replica_speeds[replica])
             stage.in_flight += 1
             stage.busy_time += service
+            node = stage.replica_nodes[replica]
+            if node < len(self.node_busy):
+                self.node_busy[node] += service
             self.telemetry.record_batch(i, self.now, len(reqs), service,
                                         len(stage.batcher))
-            # pin the dispatch-time variant: a mid-flight switch must not
-            # change which model serves an already-running batch
-            self._push(self.now + service, "complete", (i, reqs, stage.z))
+            # pin the dispatch-time variant and replica: a mid-flight switch
+            # must not change which model serves an already-running batch
+            self._push(self.now + service, "complete",
+                       (i, reqs, stage.z, replica))
         if len(stage.batcher) and stage.in_flight < stage.replicas:
             t_need = max(stage.batcher.deadline(), stage.blocked_until)
             live = (stage._pending_timer is not None
@@ -251,9 +341,34 @@ class ServingRuntime:
         return [s.busy_time / max(s.replica_seconds(self.now), 1e-9)
                 for s in self.stages]
 
+    def node_replica_seconds(self) -> list[float]:
+        return [acc + (self.now - self._node_since) * n
+                for acc, n in zip(self._node_accum, self._node_repl)]
+
+    def node_utilization(self) -> list[float]:
+        """Per-node busy replica-seconds over available replica-seconds."""
+        return [busy / max(cap, 1e-9)
+                for busy, cap in zip(self.node_busy,
+                                     self.node_replica_seconds())]
+
     def summary(self) -> dict:
-        return self.telemetry.summary(
+        out = self.telemetry.summary(
             self.now,
             stage_busy=[s.busy_time for s in self.stages],
             stage_capacity=[s.replica_seconds(self.now)
                             for s in self.stages])
+        out["migrations"] = self.migration_count
+        if self.topo is not None and self.topo.n_nodes > 1:
+            out["node_busy_s"] = list(self.node_busy)
+            out["node_utilization"] = self.node_utilization()
+        return out
+
+
+def _migrations(old: tuple[int, ...], new: tuple[int, ...]) -> int:
+    """Continuing replicas of a stage that had to move nodes: the overlap
+    shortfall between the old and new node multisets."""
+    overlap = 0
+    nodes = set(old) | set(new)
+    for k in nodes:
+        overlap += min(old.count(k), new.count(k))
+    return max(0, min(len(old), len(new)) - overlap)

@@ -2,9 +2,17 @@
 §III-A monitoring, but per-request): end-to-end latency records with
 p50/p95/p99, per-second arrival counts (the predictor's load history), batch
 dispatch log, queue depths and per-stage busy-time utilization.
+
+Interval queries (``completed_in`` / ``arrived_in`` / ``latencies``) are
+O(log n + window): the event loop records completions in non-decreasing
+finish time and arrivals in non-decreasing arrival time, so both live in
+sorted parallel arrays sliced with ``bisect`` (an out-of-order record falls
+back to an insort, keeping the invariant). ``benchmarks/telemetry_queries.py``
+asserts per-query cost stays flat as the record count grows.
 """
 from __future__ import annotations
 
+from bisect import bisect_left, insort
 from collections import defaultdict
 from dataclasses import dataclass
 
@@ -45,14 +53,29 @@ class Telemetry:
         self.completions: list[CompletionRecord] = []
         self.batches: list[BatchRecord] = []
         self.reconfigs: list[tuple[float, int]] = []  # (time, n_switched)
+        # sorted parallel indexes for O(log n) interval queries
+        self._arrival_times: list[float] = []
+        self._finish_times: list[float] = []
+        self._latencies: list[float] = []
 
     # -------------------------------------------------------- recording --
 
     def record_arrival(self, t: float):
         self.arrival_counts[int(t)] += 1
+        if self._arrival_times and t < self._arrival_times[-1]:
+            insort(self._arrival_times, t)
+        else:
+            self._arrival_times.append(t)
 
     def record_completion(self, rid: int, arrival: float, finish: float):
         self.completions.append(CompletionRecord(rid, arrival, finish))
+        if self._finish_times and finish < self._finish_times[-1]:
+            i = bisect_left(self._finish_times, finish)
+            self._finish_times.insert(i, finish)
+            self._latencies.insert(i, finish - arrival)
+        else:
+            self._finish_times.append(finish)
+            self._latencies.append(finish - arrival)
 
     def record_batch(self, stage: int, t: float, size: int, service: float,
                      queue_depth: int):
@@ -63,17 +86,22 @@ class Telemetry:
 
     # ---------------------------------------------------------- queries --
 
+    def _finish_window(self, t0: float, t1: float) -> tuple[int, int]:
+        return (bisect_left(self._finish_times, t0),
+                bisect_left(self._finish_times, t1))
+
     def latencies(self, t0: float = -np.inf, t1: float = np.inf) -> np.ndarray:
         """End-to-end latencies of requests finishing in [t0, t1)."""
-        return np.asarray([c.latency for c in self.completions
-                           if t0 <= c.finish < t1], dtype=np.float64)
+        lo, hi = self._finish_window(t0, t1)
+        return np.asarray(self._latencies[lo:hi], dtype=np.float64)
 
     def completed_in(self, t0: float, t1: float) -> int:
-        return sum(1 for c in self.completions if t0 <= c.finish < t1)
+        lo, hi = self._finish_window(t0, t1)
+        return hi - lo
 
     def arrived_in(self, t0: float, t1: float) -> int:
-        return sum(n for s, n in self.arrival_counts.items()
-                   if t0 <= s < t1)
+        return (bisect_left(self._arrival_times, t1)
+                - bisect_left(self._arrival_times, t0))
 
     def load_history(self, now: float, history: int = 120) -> np.ndarray:
         """Per-second arrival counts over the last ``history`` seconds —
@@ -100,14 +128,19 @@ class Telemetry:
     def summary(self, now: float, *, stage_busy: list[float] | None = None,
                 stage_capacity: list[float] | None = None) -> dict:
         """Roll-up of the whole run so far. ``stage_capacity`` = available
-        replica-seconds per stage (integrated across reconfigurations)."""
+        replica-seconds per stage (integrated across reconfigurations).
+        Null-safe: with zero completions the latency fields are None (JSON
+        null), never NaN — a NaN in a benchmark JSON poisons every ratio
+        gate comparison downstream (NaN < x is silently False)."""
         lat = self.latencies()
+        pcts = {k: (None if np.isnan(v) else v)
+                for k, v in self.latency_percentiles().items()}
         out = {
             "served": len(self.completions),
             "arrived": sum(self.arrival_counts.values()),
             "throughput_rps": len(self.completions) / max(now, 1e-9),
-            "latency_mean_s": float(lat.mean()) if lat.size else float("nan"),
-            **self.latency_percentiles(),
+            "latency_mean_s": float(lat.mean()) if lat.size else None,
+            **pcts,
             "mean_batch_size": self.mean_batch_size(),
             "reconfigs": len(self.reconfigs),
         }
