@@ -21,13 +21,13 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
                          "fig3,fig45,fig6,fig7,roofline,runtime,train,"
-                         "telemetry")
+                         "runtime_train,telemetry")
     args = bench_args(parser=ap)
 
     from benchmarks import (fig3_predictor, fig45_workloads,
                             fig6_decision_time, fig7_convergence, roofline,
-                            runtime_throughput, telemetry_queries,
-                            train_throughput)
+                            runtime_throughput, runtime_train_throughput,
+                            telemetry_queries, train_throughput)
     suites = {
         "fig3": fig3_predictor.run,
         "fig45": fig45_workloads.run,
@@ -36,6 +36,7 @@ def main() -> None:
         "roofline": roofline.run,
         "runtime": runtime_throughput.run,
         "train": train_throughput.run,
+        "runtime_train": runtime_train_throughput.run,
         "telemetry": telemetry_queries.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)

@@ -1,0 +1,144 @@
+"""Closed-loop runtime-episode throughput: the jitted discrete-event twin
+(``repro.core.runtime_vec``, a full adaptation episode — queues, batch
+timeouts, cold starts, placement — compiled into one call) against the
+legacy per-step loop (one Python ``RuntimeEnv``/``ServingRuntime`` step per
+decision interval), at several ``num_envs``.
+
+Metrics are episodes/s of on-policy rollout collection on the placement-aware
+``serve3-hetero`` pipeline — the hot path of ``train_backend="runtime"`` PPO
+training. Acceptance (ISSUE 6): >= 20x episodes/s at num_envs=32 vs the
+legacy loop on CPU. The committed JSON under experiments/results/ is the
+perf baseline the CI ``bench-smoke`` job gates against (fail below 0.5x).
+"""
+from __future__ import annotations
+
+import platform
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_results
+from repro import api
+from repro.cluster import RuntimeEnv
+from repro.core import OPDTrainer, PPOConfig
+from repro.core import runtime_vec as rv
+from repro.core import vecenv
+
+PIPELINE = "serve3-hetero"
+ARRIVALS = ("bursty", 25.0)
+ENV_COUNTS = (1, 8, 32)
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = False):
+    horizon = 60 if quick else 120          # 6 / 12 decision steps
+    legacy_eps = 2 if quick else 4
+    # quick mode keeps more reps so the timed region stays long enough to
+    # be stable on noisy shared CI runners (the bench-smoke gate reads it)
+    vec_reps = 8 if quick else 5
+    # both sides take the best of several timed passes: shared hosts steal
+    # the core for whole passes at a time, and min-of-k is the standard
+    # way to recover the undisturbed figure for CPU microbenchmarks
+    passes = 2 if quick else 3
+    kind, rate = ARRIVALS
+    pipe = api.get_pipeline(PIPELINE).build()
+    n_steps = max(1, horizon // 10)
+
+    from repro.serving import make_arrivals
+
+    def arrivals(seed):
+        return make_arrivals(kind, rate=rate, seed=seed)
+
+    def make_env(seed):
+        return RuntimeEnv(pipe, arrivals(seed), horizon=horizon)
+
+    tr = OPDTrainer(pipe, make_env, ppo=PPOConfig(), seed=0)
+
+    # -- legacy loop: one Python RuntimeEnv step per decision interval ---
+    tr._rollout(make_env(0), False)         # jit warmup outside the timing
+
+    def legacy_pass():
+        for e in range(1, legacy_eps + 1):
+            tr._rollout(make_env(e), False)
+
+    # -- runtime twin: whole closed-loop episode batches inside one jit --
+    tables = vecenv.tables_from_pipeline(pipe)
+    weights = tr._weights
+    base_key = jax.random.PRNGKey(0)
+    compile_s, vec_pass = {}, {}
+    for n_envs in ENV_COUNTS:
+        eps = rv.stack_episodes([rv.episode_arrivals(arrivals(100 + i),
+                                                     horizon)
+                                 for i in range(n_envs)])
+        keys = jax.vmap(lambda s: jax.random.fold_in(base_key, s))(
+            np.arange(n_envs))
+        args = (tr.params, tables, eps, keys)
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            rv.vec_rollout(*args, n_steps=n_steps, weights=weights))
+        compile_s[n_envs] = time.perf_counter() - t0
+
+        def one_pass(args=args):
+            for _ in range(vec_reps):
+                out = rv.vec_rollout(*args, n_steps=n_steps,
+                                     weights=weights)
+            jax.block_until_ready(out)
+        vec_pass[n_envs] = one_pass
+
+    # legacy and vectorized passes interleave so a host-level slowdown
+    # (shared CPU, frequency drift) lands on both sides of the speedup
+    # ratio instead of whichever happened to run while it lasted
+    legacy_walls, vec_walls = [], {n: [] for n in ENV_COUNTS}
+    for _ in range(passes):
+        legacy_walls.append(_timed(legacy_pass))
+        for n_envs in ENV_COUNTS:
+            vec_walls[n_envs].append(_timed(vec_pass[n_envs]))
+
+    wall = min(legacy_walls)
+    legacy = {"episodes": legacy_eps, "wall_s": wall,
+              "episodes_per_s": legacy_eps / wall,
+              "steps_per_s": legacy_eps * n_steps / wall}
+    vec = {}
+    for n_envs in ENV_COUNTS:
+        wall = min(vec_walls[n_envs])
+        vec[str(n_envs)] = {
+            "episodes": n_envs * vec_reps, "wall_s": wall,
+            "compile_s": compile_s[n_envs],
+            "episodes_per_s": n_envs * vec_reps / wall,
+            "steps_per_s": n_envs * vec_reps * n_steps / wall,
+        }
+
+    top = str(max(ENV_COUNTS))
+    speedup = vec[top]["episodes_per_s"] / legacy["episodes_per_s"]
+    payload = {
+        "mode": "quick" if quick else "full",
+        "pipeline": PIPELINE, "arrivals": {"kind": kind, "rate": rate},
+        "horizon": horizon, "steps_per_episode": n_steps,
+        "legacy": legacy, "vectorized": vec,
+        "speedup_episodes_at_32": speedup,
+        "jax": jax.__version__, "python": platform.python_version(),
+        "device": jax.devices()[0].platform,
+    }
+    save_results("runtime_train_throughput", payload)
+
+    rows = [("runtime_train_throughput", "legacy.episodes_per_s",
+             round(legacy["episodes_per_s"], 2), "")]
+    for n_envs in ENV_COUNTS:
+        rows.append(("runtime_train_throughput",
+                     f"vec{n_envs}.episodes_per_s",
+                     round(vec[str(n_envs)]["episodes_per_s"], 2), ""))
+    rows.append(("runtime_train_throughput", "speedup_episodes_at_32",
+                 round(speedup, 1), ">= 20x legacy loop (ISSUE 6)"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import bench_main
+
+    bench_main(run)

@@ -66,13 +66,23 @@ class Session:
 
     def train(self, episodes: int | None = None, *, log=None) -> "Session":
         """Run PPO training for learned controllers; no-op for baselines.
-        Training envs are analytic (cheap) and fully seeded from the spec."""
+        The controller's ``train_backend`` picks what on-policy episodes
+        roll on: "analytic" steps the closed-form ``PipelineEnv`` (optionally
+        vectorized via ``num_envs``), "runtime" rolls closed-loop episodes
+        on the jitted discrete-event twin (``core.runtime_vec``) — expert
+        episodes always step a real env. Fully seeded from the spec."""
         c, scen = self.spec.controller, self.spec.scenario
         episodes = c.train_episodes if episodes is None else episodes
         if not self.trainable or episodes <= 0:
             return self
+        runtime_backend = c.train_backend == "runtime"
+        if c.train_backend not in ("analytic", "runtime"):
+            raise ValueError(f"unknown train_backend {c.train_backend!r}")
 
         def make_env(seed):
+            if runtime_backend:
+                return RuntimeEnv(self.pipe, scen.train_arrivals(seed),
+                                  horizon=scen.horizon)
             return PipelineEnv(self.pipe,
                                scen.train_trace(seed, seconds=c.train_seconds),
                                seed=seed)
@@ -81,7 +91,8 @@ class Session:
             self.trainer = OPDTrainer(
                 self.pipe, make_env,
                 ppo=PPOConfig(expert_freq=c.expert_freq), seed=c.seed,
-                num_envs=c.num_envs)
+                num_envs=c.num_envs,
+                vec_runtime=scen.train_arrivals if runtime_backend else None)
         for ep in range(1, episodes + 1):
             self.trainer.train_episode(ep, env_seed=ep)
             if log:

@@ -135,6 +135,16 @@ class ScenarioSpec:
                               seconds=self.horizon)
         return self.build_arrivals().rates(self.horizon)
 
+    def train_arrivals(self, episode: int) -> ArrivalProcess:
+        """Arrival process for runtime-twin PPO episode ``episode`` — the
+        scenario's own arrival family at the scenario rate, with a seed
+        decorrelated from the eval stream and across episodes."""
+        seed = self.seed + 7919 * (episode + 1)
+        if self.kind in WORKLOADS:
+            return TraceArrivals(make_trace(self.kind, seed=seed,
+                                            peak=self.rate), seed=seed)
+        return make_arrivals(self.kind, rate=self.rate, seed=seed)
+
     def train_trace(self, episode: int, *, seconds: int = 1200) -> np.ndarray:
         """Training trace for PPO episode ``episode`` — covers the demand
         levels the scenario will serve, decorrelated across episodes."""
@@ -164,8 +174,12 @@ class ControllerSpec:
     train_episodes: int = 0      # PPO episodes before serving (OPD only)
     train_seconds: int = 1200    # length of each training trace
     expert_freq: int = 2         # Alg. 2 expert-guided episode frequency
-    num_envs: int = 1            # parallel analytic envs per PPO episode
-    #                              (>1 -> the vectorized core.vecenv engine)
+    num_envs: int = 1            # parallel envs per PPO episode (>1 with
+    #                              the analytic backend -> core.vecenv)
+    train_backend: str = "analytic"  # what on-policy episodes roll on:
+    #                              "analytic" (closed-form PipelineEnv) or
+    #                              "runtime" (core.runtime_vec, the jitted
+    #                              discrete-event twin of ServingRuntime)
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -177,7 +191,8 @@ class ControllerSpec:
                    train_episodes=int(d.get("train_episodes", 0)),
                    train_seconds=int(d.get("train_seconds", 1200)),
                    expert_freq=int(d.get("expert_freq", 2)),
-                   num_envs=int(d.get("num_envs", 1)))
+                   num_envs=int(d.get("num_envs", 1)),
+                   train_backend=str(d.get("train_backend", "analytic")))
 
 
 @dataclass(frozen=True)

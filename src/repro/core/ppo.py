@@ -4,13 +4,18 @@ mini-batch SGD with Adam optimizer").
 
 Rollout collection has two engines:
 
-- legacy loop: one NumPy ``PipelineEnv`` stepped per Python iteration —
-  the reference path, and the only one that can drive the expert (host-side
-  coordinate descent) or the event-driven runtime;
-- vectorized (``num_envs > 1``): the pure-JAX ``core.vecenv`` engine rolls
-  ``num_envs`` analytic environments per episode in one jitted
+- legacy loop: one NumPy ``PipelineEnv``/``RuntimeEnv`` stepped per Python
+  iteration — the reference path, and the only one that can drive the
+  expert (host-side coordinate descent);
+- vectorized analytic (``num_envs > 1``): the pure-JAX ``core.vecenv``
+  engine rolls ``num_envs`` analytic environments per episode in one jitted
   scan-over-vmap call, with scan-based GAE (``benchmarks/train_throughput``
-  measures the speedup and CI gates it).
+  measures the speedup and CI gates it);
+- vectorized runtime (``vec_runtime`` arrivals factory): the
+  ``core.runtime_vec`` discrete-event twin rolls closed-loop episodes on
+  the *runtime* dynamics — queues, batch timeouts, cold starts — entirely
+  inside one jitted call, never constructing a per-env ``RuntimeEnv``
+  (``benchmarks/runtime_train_throughput`` measures the speedup).
 """
 from __future__ import annotations
 
@@ -21,8 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import runtime_vec
 from repro.core.expert import ExpertPolicy
-from repro.core.mdp import Pipeline, QoSWeights
+from repro.core.mdp import ADAPTATION_INTERVAL, Pipeline, QoSWeights
 from repro.core.policy import (action_to_config, config_to_action, head_sizes,
                                init_policy, log_prob_entropy, sample_action)
 from repro.core.vecenv import tables_from_pipeline, vec_gae, vec_rollout
@@ -94,7 +100,7 @@ class OPDTrainer:
 
     def __init__(self, pipe: Pipeline, make_env, *, ppo: PPOConfig | None = None,
                  weights: QoSWeights | None = None, seed: int = 0,
-                 num_envs: int = 1):
+                 num_envs: int = 1, vec_runtime=None):
         self.pipe = pipe
         self.make_env = make_env
         self.ppo = ppo or PPOConfig()
@@ -111,14 +117,21 @@ class OPDTrainer:
         # replay memory D of expert transitions (Algorithm 2)
         self.expert_states = np.zeros((0, env.state_dim), np.float32)
         self.expert_actions = np.zeros((0, len(self.sizes)), np.int32)
-        # vectorized rollout engine (core.vecenv): analytic envs without an
-        # external predictor only — expert episodes and runtime envs keep
-        # the legacy per-step loop
+        # vectorized rollout engines: core.vecenv for analytic envs without
+        # an external predictor, core.runtime_vec (the discrete-event twin)
+        # when a ``vec_runtime`` arrivals factory (seed -> ArrivalProcess)
+        # is supplied — expert episodes always keep the legacy per-step loop
         self.num_envs = max(1, int(num_envs))
+        self._vec_runtime = vec_runtime
         self._vec_ok = (self.num_envs > 1 and hasattr(env, "trace")
                         and getattr(env, "predictor", None) is None)
-        self._tables = tables_from_pipeline(pipe) if self._vec_ok else None
+        self._tables = (tables_from_pipeline(pipe)
+                        if self._vec_ok or vec_runtime is not None else None)
         self._weights = getattr(env, "w", None) or QoSWeights()
+        if vec_runtime is not None:
+            self._rt_horizon = int(getattr(env, "horizon", 120))
+            self._rt_max_wait = float(
+                getattr(env, "max_wait", runtime_vec.DEFAULT_MAX_WAIT))
 
     def _rollout(self, env, use_expert: bool):
         states, actions, logps, rewards, values = [], [], [], [], []
@@ -152,25 +165,16 @@ class OPDTrainer:
                 np.asarray(logps, np.float32), np.asarray(rewards, np.float32),
                 np.asarray(values, np.float32), float(last_v[0]))
 
-    def _rollout_vec(self, base_seed: int):
-        """Collect ``num_envs`` parallel episodes with the pure-JAX engine:
-        one jitted scan-over-vmap call. Env seeds are ``VEC_SEED_BASE +
-        base_seed * num_envs + i`` — distinct traces per env, disjoint
-        across episodes AND from the small legacy/expert episode seeds, so
-        the expert replay memory never replays an on-policy trace. Returns
-        flattened [num_envs * T] trajectory arrays + batched GAE."""
-        cfg = self.ppo
-        s0 = VEC_SEED_BASE + base_seed * self.num_envs
-        envs = [self.make_env(s0 + i) for i in range(self.num_envs)]
-        n_steps = envs[0].n_steps
-        assert all(e.n_steps == n_steps for e in envs), \
-            "vectorized rollout needs equal-length traces"
-        traces = jnp.asarray(np.stack([e.trace for e in envs]), jnp.float32)
+    def _env_keys(self, s0: int):
+        """Per-env PRNG keys folded from distinct seeds ``s0 + i``."""
         self.key, ep_key = jax.random.split(self.key)
         seeds = jnp.arange(s0, s0 + self.num_envs)
-        env_keys = jax.vmap(lambda s: jax.random.fold_in(ep_key, s))(seeds)
-        traj = vec_rollout(self.params, self._tables, traces, env_keys,
-                           n_steps=n_steps, weights=self._weights)
+        return jax.vmap(lambda s: jax.random.fold_in(ep_key, s))(seeds)
+
+    def _finish_vec(self, traj):
+        """Batched GAE + flatten a [num_envs, T, ...] trajectory to the
+        [num_envs * T] transition arrays ``_update`` consumes."""
+        cfg = self.ppo
         adv, returns = vec_gae(traj["rewards"] * cfg.reward_scale,
                                traj["values"], traj["last_value"],
                                gamma=cfg.gamma, lam=cfg.gae_lambda)
@@ -183,6 +187,41 @@ class OPDTrainer:
                 np.asarray(traj["rewards"], np.float32),
                 flat(adv).astype(np.float32),
                 flat(returns).astype(np.float32))
+
+    def _rollout_vec(self, base_seed: int):
+        """Collect ``num_envs`` parallel episodes with the pure-JAX engine:
+        one jitted scan-over-vmap call. Env seeds are ``VEC_SEED_BASE +
+        base_seed * num_envs + i`` — distinct traces per env, disjoint
+        across episodes AND from the small legacy/expert episode seeds, so
+        the expert replay memory never replays an on-policy trace. Returns
+        flattened [num_envs * T] trajectory arrays + batched GAE."""
+        s0 = VEC_SEED_BASE + base_seed * self.num_envs
+        envs = [self.make_env(s0 + i) for i in range(self.num_envs)]
+        n_steps = envs[0].n_steps
+        assert all(e.n_steps == n_steps for e in envs), \
+            "vectorized rollout needs equal-length traces"
+        traces = jnp.asarray(np.stack([e.trace for e in envs]), jnp.float32)
+        traj = vec_rollout(self.params, self._tables, traces,
+                           self._env_keys(s0), n_steps=n_steps,
+                           weights=self._weights)
+        return self._finish_vec(traj)
+
+    def _rollout_vec_runtime(self, base_seed: int):
+        """Collect ``num_envs`` closed-loop episodes on the discrete-event
+        runtime twin (``core.runtime_vec``) in one jitted call. Only the
+        host-side arrival arrays are materialised per env — no per-env
+        ``RuntimeEnv``/``ServingRuntime`` objects are ever constructed.
+        Same seed discipline as ``_rollout_vec``."""
+        s0 = VEC_SEED_BASE + base_seed * self.num_envs
+        eps = runtime_vec.stack_episodes([
+            runtime_vec.episode_arrivals(self._vec_runtime(s0 + i),
+                                         self._rt_horizon)
+            for i in range(self.num_envs)])
+        traj = runtime_vec.vec_rollout(
+            self.params, self._tables, eps, self._env_keys(s0),
+            n_steps=max(1, self._rt_horizon // ADAPTATION_INTERVAL),
+            weights=self._weights, max_wait=self._rt_max_wait)
+        return self._finish_vec(traj)
 
     def _update(self, states, actions, logps, adv, returns):
         """Mini-batch Adam epochs over one batch of transitions (Eq. 11)."""
@@ -225,7 +264,10 @@ class OPDTrainer:
         use_expert = cfg.expert_freq > 0 and episode_idx % cfg.expert_freq == 0
         base = env_seed if env_seed is not None else episode_idx
 
-        if self._vec_ok and not use_expert:
+        if self._vec_runtime is not None and not use_expert:
+            states, actions, logps, rewards, adv, returns = \
+                self._rollout_vec_runtime(base)
+        elif self._vec_ok and not use_expert:
             states, actions, logps, rewards, adv, returns = \
                 self._rollout_vec(base)
         else:

@@ -56,6 +56,7 @@ class PipelineTables(NamedTuple):
     node_speed: jax.Array    # [K]     per-node service-rate factor
     hop_latency: jax.Array   # scalar  s per adjacent-stage cross-node hop
     replica_slots: jax.Array  # [f_max] static replica-slot index (loop bound)
+    batch_slots: jax.Array   # [b_max] static batch-slot index (shape carrier)
 
     @property
     def n_tasks(self) -> int:
@@ -105,7 +106,8 @@ def tables_from_pipeline(pipe: Pipeline) -> PipelineTables:
         f_max=jnp.float32(pipe.f_max), b_max=jnp.float32(pipe.b_max),
         w_max=jnp.float32(pipe.w_max),
         node_capacity=node_capacity, node_speed=node_speed, hop_latency=hop,
-        replica_slots=jnp.arange(pipe.f_max, dtype=jnp.int32))
+        replica_slots=jnp.arange(pipe.f_max, dtype=jnp.int32),
+        batch_slots=jnp.arange(pipe.b_max, dtype=jnp.int32))
 
 
 def init_state(tables: PipelineTables) -> EnvState:
@@ -131,27 +133,40 @@ def _gather(table: jax.Array, z: jax.Array) -> jax.Array:
     return jnp.take_along_axis(table, z[:, None], axis=1)[:, 0]
 
 
-def _placement(tables: PipelineTables, z: jax.Array, f: jax.Array):
+class PlacementArrays(NamedTuple):
+    """Result of the jnp first-fit scheduler: per-stage aggregates plus the
+    per-slot node speeds the runtime twin's replica pools dispatch with."""
+    speed_sum: jax.Array     # [N]    Σ node speed over the stage's replicas
+    min_speed: jax.Array     # [N]    slowest node hosting a replica
+    primary: jax.Array       # [N]    node with the most replicas (ties low)
+    overflow: jax.Array      # scalar force-placed resource shortfall
+    rem: jax.Array           # [K]    per-node remaining capacity
+    slot_speed: jax.Array    # [N, R] node speed of replica slot r (1 if r>=f)
+
+
+def _placement(tables: PipelineTables, z: jax.Array,
+               f: jax.Array) -> PlacementArrays:
     """The jnp twin of ``cluster.topology``'s first-fit scheduler, taking
     identical discrete decisions (capacities and per-replica resources are
     integral chip counts, so every comparison is exact in float32).
 
     Unrolled over the static (n_tasks × f_max) replica slots; inactive slots
-    (r >= f_n) are masked out. Returns per-stage (speed_sum, min_speed,
-    primary node), the total placement ``overflow`` and the per-node
-    remaining capacity."""
+    (r >= f_n) are masked out. Replica slot ``r`` of stage ``i`` maps to the
+    Python scheduler's ``Placement.nodes[i][r]`` — same assignment order, so
+    ``slot_speed`` mirrors ``RuntimeStage.replica_speeds`` exactly."""
     res = _gather(tables.resource, z)             # [N]
     K = tables.n_nodes
     R = tables.replica_slots.shape[0]
     rem = tables.node_capacity
     speed = tables.node_speed
     overflow = jnp.float32(0.0)
-    speed_sums, min_speeds, primaries = [], [], []
+    speed_sums, min_speeds, primaries, slot_rows = [], [], [], []
     for i in range(tables.n_tasks):
         w = res[i]
         s_sum = jnp.float32(0.0)
         s_min = jnp.float32(jnp.inf)
         counts = jnp.zeros(K, jnp.int32)
+        slots = []
         for r in range(R):
             active = r < f[i]
             fits = rem >= w
@@ -163,45 +178,57 @@ def _placement(tables: PipelineTables, z: jax.Array, f: jax.Array):
             s_sum = s_sum + speed[idx] * amt
             s_min = jnp.where(active, jnp.minimum(s_min, speed[idx]), s_min)
             counts = counts.at[idx].add(active.astype(jnp.int32))
+            slots.append(jnp.where(active, speed[idx], 1.0))
         speed_sums.append(s_sum)
         min_speeds.append(jnp.where(jnp.isfinite(s_min), s_min, 1.0))
         primaries.append(jnp.argmax(counts))
-    speed_sum = jnp.stack(speed_sums)
-    min_speed = jnp.stack(min_speeds)
-    primary = jnp.stack(primaries)
-    return speed_sum, min_speed, primary, overflow, rem
+        slot_rows.append(jnp.stack(slots))
+    return PlacementArrays(speed_sum=jnp.stack(speed_sums),
+                           min_speed=jnp.stack(min_speeds),
+                           primary=jnp.stack(primaries),
+                           overflow=overflow, rem=rem,
+                           slot_speed=jnp.stack(slot_rows))
 
 
-def observe(tables: PipelineTables, state: EnvState,
-            trace: jax.Array) -> jax.Array:
+def observe_cfg(tables: PipelineTables, z: jax.Array, f: jax.Array,
+                b: jax.Array, load: jax.Array) -> jax.Array:
     """Eq. (5) observation [N * 9] (plus one per-node free-capacity fraction
-    per task row on a heterogeneous topology); predicted load = current load
-    (the training envs attach no external predictor)."""
-    z, f, b = state.z, state.f.astype(jnp.float32), state.b.astype(jnp.float32)
+    per task row on a heterogeneous topology) for configuration (z, f, b)
+    under current load ``load`` (req/s); predicted load = current load (the
+    training envs attach no external predictor). Shared by the analytic
+    ``observe`` (load from the trace) and the runtime twin (measured load)."""
+    fj, bj = f.astype(jnp.float32), b.astype(jnp.float32)
     res = _gather(tables.resource, z)
-    usage = jnp.sum(res * f)
+    usage = jnp.sum(res * fj)
     u = (tables.w_max - usage) / tables.w_max
-    s = state.t * ADAPTATION_INTERVAL
-    cur = trace[jnp.maximum(0, s - 1)]
-    p = cur / 100.0
-    lat = _gather(tables.alpha, z) + _gather(tables.beta, z) * b
-    thr = f * b / lat
+    p = load / 100.0
+    lat = _gather(tables.alpha, z) + _gather(tables.beta, z) * bj
+    thr = fj * bj / lat
     n = tables.n_tasks
     rows = jnp.stack([
         jnp.full((n,), u), jnp.full((n,), p), jnp.full((n,), p),
         lat,
         thr / 100.0,
         z / jnp.maximum(1, tables.n_variants - 1),
-        f / tables.f_max,
-        b / tables.b_max,
-        f * _gather(tables.cost, z) / tables.w_max,
+        fj / tables.f_max,
+        bj / tables.b_max,
+        fj * _gather(tables.cost, z) / tables.w_max,
     ], axis=1)
     if tables.n_nodes:                 # node status columns (heterogeneous)
-        _, _, _, _, rem = _placement(tables, z, state.f)
-        node_free = rem / tables.node_capacity
+        pl = _placement(tables, z, f)
+        node_free = pl.rem / tables.node_capacity
         rows = jnp.concatenate(
             [rows, jnp.tile(node_free[None, :], (n, 1))], axis=1)
     return rows.reshape(-1).astype(jnp.float32)
+
+
+def observe(tables: PipelineTables, state: EnvState,
+            trace: jax.Array) -> jax.Array:
+    """Eq. (5) observation of an analytic env state: current load read from
+    the trace at the last second of the previous interval."""
+    s = state.t * ADAPTATION_INTERVAL
+    cur = trace[jnp.maximum(0, s - 1)]
+    return observe_cfg(tables, state.z, state.f, state.b, cur)
 
 
 @partial(jax.jit, static_argnames=("weights",))
@@ -238,12 +265,13 @@ def step(tables: PipelineTables, state: EnvState, action: jax.Array,
         hop_total = jnp.float32(0.0)
         infeasible = jnp.sum(res * f) > tables.w_max
     else:                              # placement-aware physics
-        speed_sum, min_speed, primary, overflow, _ = _placement(tables, z, f)
-        thr = speed_sum * bf / lat
-        lat_eff = lat / min_speed
-        n_hops = jnp.sum((primary[:-1] != primary[1:]).astype(jnp.float32))
+        pl = _placement(tables, z, f)
+        thr = pl.speed_sum * bf / lat
+        lat_eff = lat / pl.min_speed
+        n_hops = jnp.sum((pl.primary[:-1] != pl.primary[1:])
+                         .astype(jnp.float32))
         hop_total = tables.hop_latency * n_hops
-        infeasible = overflow > 0
+        infeasible = pl.overflow > 0
     rho = demand / jnp.maximum(thr, 1e-9)
     congestion = 1.0 / jnp.maximum(1.0 - rho, 0.1)
     lat_total = jnp.sum(wait + lat_eff * congestion) + hop_total

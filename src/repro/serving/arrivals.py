@@ -22,6 +22,7 @@ class ArrivalProcess:
 
     def __init__(self, *, seed: int = 0):
         self.seed = seed
+        self._times_cache: dict[float, np.ndarray] = {}
 
     def rates(self, horizon: int) -> np.ndarray:
         raise NotImplementedError
@@ -36,20 +37,38 @@ class ArrivalProcess:
             out[f] = v.tolist() if isinstance(v, np.ndarray) else v
         return out
 
+    def times(self, horizon: float) -> np.ndarray:
+        """The full event-time array for this process over [0, horizon):
+        sorted arrival timestamps (virtual seconds), generated once and
+        cached, so the Python event loop and the jitted runtime twin consume
+        *identical* arrivals. The returned array is read-only — it is shared
+        between callers.
+
+        Generation is fully vectorized: all per-second Poisson counts in one
+        draw, all uniform offsets in a second, instead of the historical
+        per-second Python loop."""
+        key = float(horizon)
+        out = self._times_cache.get(key)
+        if out is None:
+            rng = np.random.default_rng(self.seed)
+            seconds = int(np.ceil(horizon))
+            lam = np.clip(np.asarray(self.rates(seconds), np.float64),
+                          0.0, None)
+            counts = rng.poisson(lam)
+            total = int(counts.sum())
+            if total == 0:
+                out = np.empty(0, dtype=np.float64)
+            else:
+                base = np.repeat(np.arange(seconds, dtype=np.float64), counts)
+                out = np.sort(base + rng.random(total))
+                out = out[out < horizon]
+            out.flags.writeable = False
+            self._times_cache[key] = out
+        return out
+
     def generate(self, horizon: float) -> np.ndarray:
         """Sorted arrival timestamps (virtual seconds) in [0, horizon)."""
-        rng = np.random.default_rng(self.seed)
-        seconds = int(np.ceil(horizon))
-        lam = np.asarray(self.rates(seconds), dtype=np.float64)
-        times = []
-        for s in range(seconds):
-            n = rng.poisson(max(lam[s], 0.0))
-            if n:
-                times.append(rng.uniform(s, s + 1, n))
-        if not times:
-            return np.empty(0, dtype=np.float64)
-        out = np.sort(np.concatenate(times))
-        return out[out < horizon]
+        return self.times(horizon)
 
 
 class PoissonArrivals(ArrivalProcess):

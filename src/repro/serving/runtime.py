@@ -112,6 +112,7 @@ class ServingRuntime:
         self.switch_count = 0
         self.migration_count = 0      # replicas moved across nodes by reconfigs
         self.last_migrations = 0
+        self.stale_timers_dropped = 0  # superseded timer events ignored
         self._heap: list[tuple[float, int, str, object]] = []
         self._seq = itertools.count()
         # cluster topology: placement charges replica-seconds per node and
@@ -212,7 +213,13 @@ class ServingRuntime:
             self.migration_count += self.last_migrations
         self.switch_count += switched
         self.telemetry.record_reconfig(self.now, switched)
-        for i in range(len(self.stages)):
+        for i, stage in enumerate(self.stages):
+            # timers armed under the old configuration (old batch deadline /
+            # cold-start gate, possibly retired batchers or replicas) are no
+            # longer authoritative: invalidate them so the poke below arms a
+            # fresh one for the *new* configuration and the heaped ones are
+            # dropped as stale when they fire
+            stage._pending_timer = None
             self._poke(i)
         return switched
 
@@ -237,7 +244,7 @@ class ServingRuntime:
             elif kind == "complete":
                 self._on_complete(*payload)
             elif kind == "timer":
-                self._on_timer(payload)
+                self._on_timer(*payload)
             elif kind == "xfer":
                 self._on_xfer(*payload)
         self.now = max(self.now, t_end)
@@ -255,10 +262,17 @@ class ServingRuntime:
         self.stages[0].batcher.put(req, self.now)
         self._poke(0)
 
-    def _on_timer(self, i: int):
+    def _on_timer(self, i: int, armed_at: float):
+        """A timer is only actionable if it is still the stage's pending one.
+        Reconfigurations (and re-arms at a different deadline) supersede
+        previously heaped timers — those must be ignored, not fired against
+        the new configuration."""
         stage = self.stages[i]
-        if stage._pending_timer is not None and self.now >= stage._pending_timer - 1e-12:
-            stage._pending_timer = None
+        if (stage._pending_timer is None
+                or abs(stage._pending_timer - armed_at) > 1e-12):
+            self.stale_timers_dropped += 1
+            return
+        stage._pending_timer = None
         self._poke(i)
 
     def _on_complete(self, i: int, reqs: list[Request], z: int,
@@ -329,7 +343,7 @@ class ServingRuntime:
             live = (stage._pending_timer is not None
                     and self.now - 1e-12 <= stage._pending_timer <= t_need + 1e-12)
             if t_need > self.now and not live:
-                self._push(t_need, "timer", i)
+                self._push(t_need, "timer", (i, t_need))
                 stage._pending_timer = t_need
 
     # ----------------------------------------------------------- queries --

@@ -179,6 +179,46 @@ class TestClosedLoop:
         from repro.serving.runtime import COLD_START_SECONDS
         assert req.finish >= COLD_START_SECONDS
 
+    def test_stale_timers_dropped_after_reconfig(self):
+        """A timer armed under the old configuration must not fire against
+        the new one: after apply_config re-gates the stage (cold start), the
+        already-heaped partial-batch timeout is superseded — the batch
+        dispatches at the *new* cold-start gate, and the stale timer is
+        counted as dropped instead of poking the reconfigured stage."""
+        pipe2 = make_pipeline([[ARCHS["whisper-small"], ARCHS["xlstm-125m"]]],
+                              quants=("bf16",))
+        rt = ServingRuntime.from_pipeline(
+            pipe2, cfg=Config(z=(0,), f=(1,), b=(8,)), max_wait=0.2)
+        rt.submit(Request(rid=0, tokens=np.arange(32, dtype=np.int32)), at=0.0)
+        rt.run_until(0.0)        # arrival poked: timeout timer armed at 0.2
+        assert rt.stages[0]._pending_timer == pytest.approx(0.2)
+        # variant switch: cold start re-gates the stage until t=3.0 and the
+        # 0.2 timer is no longer authoritative
+        rt.apply_config(Config(z=(1,), f=(1,), b=(8,)))
+        from repro.serving.runtime import COLD_START_SECONDS
+        assert rt.stages[0]._pending_timer == pytest.approx(COLD_START_SECONDS)
+        rt.drain()
+        assert rt.stale_timers_dropped >= 1
+        assert len(rt.completed) == 1
+        first_batch = rt.telemetry.batches[0]
+        # dispatched exactly at the cold-start gate, not the stale deadline
+        assert first_batch.time == pytest.approx(COLD_START_SECONDS)
+
+    def test_replica_shrink_invalidates_timers(self):
+        """Shrinking replicas mid-run leaves heaped timers for the old pool;
+        they must be ignored (no lost or double-dispatched work)."""
+        rt = build_runtime(Config(z=(0, 0), f=(4, 4), b=(4, 4)))
+        n = rt.load(PoissonArrivals(30, seed=11), 30)
+        rt.run_until(8.0)
+        rt.apply_config(Config(z=(0, 0), f=(1, 1), b=(2, 2)))
+        rt.run_until(20.0)
+        rt.apply_config(Config(z=(0, 0), f=(4, 4), b=(8, 8)))
+        rt.drain()
+        assert len(rt.completed) == n
+        assert rt.in_system == 0
+        finishes = [r.finish for r in rt.completed]
+        assert finishes == sorted(finishes)
+
     def test_runtime_env_closed_loop(self):
         """RuntimeEnv: observation layout matches Eq. (5), rewards are
         finite, telemetry percentiles appear in info, and reconfiguration
