@@ -38,10 +38,17 @@ def bench_args(argv=None, *, description: str | None = None,
     episode/epoch counts) and ``--out DIR`` (JSON destination). Pass a
     pre-built ``parser`` to stack script-specific flags on top."""
     ap = parser or argparse.ArgumentParser(description=description)
-    ap.add_argument("--quick", action="store_true",
-                    help="reduced episode/epoch counts (CI-sized)")
-    ap.add_argument("--out", default=None, metavar="DIR",
-                    help=f"write JSON results here (default {RESULTS_DIR})")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="reduced episode/epoch counts (CI-sized)",
+    )
+    ap.add_argument(
+        "--out",
+        default=None,
+        metavar="DIR",
+        help=f"write JSON results here (default {RESULTS_DIR})",
+    )
     args = ap.parse_args(argv)
     if args.out:
         set_results_dir(args.out)
@@ -87,8 +94,10 @@ def trained_opd(episodes: int = 36, *, seed: int = 0, force: bool = False,
     from repro.cluster import PipelineEnv
     from repro.core import OPDTrainer, PPOConfig
 
-    cache = (POLICY_CACHE if cache_tag is None else
-             os.path.join("experiments", f"opd_policy_{cache_tag}.pkl"))
+    cache = POLICY_CACHE if cache_tag is None else os.path.join(
+        "experiments",
+        f"opd_policy_{cache_tag}.pkl",
+    )
     if not force and os.path.exists(cache):
         with open(cache, "rb") as f:
             blob = pickle.load(f)
@@ -107,12 +116,16 @@ def trained_opd(episodes: int = 36, *, seed: int = 0, force: bool = False,
     for e in range(1, episodes + 1):
         tr.train_episode(e, env_seed=e)
         if log and (e % 6 == 0 or e == 1):
-            log(f"  opd episode {e:3d}/{episodes} "
+            log(
+                f"  opd episode {e:3d}/{episodes} "
                 f"reward={tr.history['reward'][-1]:9.2f} "
                 f"loss={tr.history['loss'][-1]:8.4f} "
-                f"expert={tr.history['expert'][-1]}")
+                f"expert={tr.history['expert'][-1]}"
+            )
     os.makedirs(os.path.dirname(cache), exist_ok=True)
     with open(cache, "wb") as f:
-        pickle.dump({"params": tr.params, "history": tr.history,
-                     "episodes": episodes}, f)
+        pickle.dump(
+            {"params": tr.params, "history": tr.history, "episodes": episodes},
+            f,
+        )
     return tr.params, tr.history

@@ -22,15 +22,15 @@ def run(quick: bool = False):
     epochs = 4 if quick else 12
     for kind in ("steady_low", "fluctuating", "steady_high"):
         traces = [make_trace(kind, seed=s) for s in range(2 if quick else 4)]
-        params = train_predictor(traces, scale=SCALE, epochs=epochs, seed=0,
-                                 log=None)
+        params = train_predictor(traces, scale=SCALE, epochs=epochs, seed=0, log=None)
         err = smape(params, [make_trace(kind, seed=9)], scale=SCALE)
         payload[kind] = {"smape_pct": err}
         rows.append(("fig3", f"smape_{kind}_pct", round(err, 2), "paper ~6%"))
 
     # decision latency of one prediction (paper: < 50 ms)
-    hist = jnp.asarray(make_trace("fluctuating", seed=3)[:120],
-                       dtype=jnp.float32)[None] / SCALE
+    hist = jnp.asarray(make_trace("fluctuating", seed=3)[:120], dtype=jnp.float32)[
+        None
+    ] / SCALE
     predict_batch(params, hist).block_until_ready()   # warm
     t0 = time.perf_counter()
     reps = 20

@@ -33,7 +33,8 @@ def _episode(kind, name, params, pipeline, horizon=None):
         pipeline=pipeline,
         scenario=scen,
         controller=api.replace(api.get_controller(name), seed=EVAL_SEED),
-        backend="analytic")
+        backend="analytic",
+    )
     sess = api.Session.from_spec(exp)
     if name == "opd":
         sess.with_params(params)     # shared agent, trained on all regimes
@@ -44,12 +45,17 @@ def run(quick: bool = False, cluster: str | None = None):
     pipeline = api.get_pipeline("paper-4stage")
     if cluster:
         pipeline = api.replace(pipeline, cluster=api.get_cluster(cluster))
-    params, _ = trained_opd(episodes=12 if quick else 36,
-                            pipeline=pipeline if cluster else None,
-                            cache_tag=cluster)
+    params, _ = trained_opd(
+        episodes=12 if quick else 36,
+        pipeline=pipeline if cluster else None,
+        cache_tag=cluster,
+    )
     # the heterogeneous quick sweep is CI-sized: one regime, shorter cycle
-    kinds = (("fluctuating",) if cluster and quick
-             else ("steady_low", "fluctuating", "steady_high"))
+    kinds = ("fluctuating",) if cluster and quick else (
+        "steady_low",
+        "fluctuating",
+        "steady_high",
+    )
     horizon = 400 if cluster and quick else None
     rows, payload = [], {}
     for kind in kinds:
@@ -58,11 +64,13 @@ def run(quick: bool = False, cluster: str | None = None):
             ep = _episode(kind, name, params, pipeline, horizon)
             cost = np.asarray(ep["cost"])
             qos = np.asarray(ep["qos"])
-            res[name] = {"cost": float(cost.mean()),
-                         "qos": float(qos.mean()),
-                         "cost_std": float(cost.std()),
-                         "qos_std": float(qos.std()),
-                         "reward": float(np.mean(ep["rewards"]))}
+            res[name] = {
+                "cost": float(cost.mean()),
+                "qos": float(qos.mean()),
+                "cost_std": float(cost.std()),
+                "qos_std": float(qos.std()),
+                "reward": float(np.mean(ep["rewards"])),
+            }
         payload[kind] = res
         g, i, o = res["greedy"], res["ipa"], res["opd"]
         bench = "fig45" if not cluster else f"fig45@{cluster}"
@@ -71,25 +79,38 @@ def run(quick: bool = False, cluster: str | None = None):
             return "" if cluster else claims[kind]
 
         rows += [
-            (bench, f"{kind}.opd_cost_vs_greedy_pct",
-             round(100 * (o["cost"] / max(g["cost"], 1e-9) - 1), 1),
-             ref({"steady_low": "+120%", "fluctuating": "+37%",
-                  "steady_high": "~0%"})),
-            (bench, f"{kind}.opd_qos_vs_greedy_pct",
-             round(100 * _rel(o["qos"], g["qos"]), 1),
-             ref({"steady_low": "+36%", "fluctuating": "+21%",
-                  "steady_high": "~0%"})),
-            (bench, f"{kind}.opd_cost_vs_ipa_pct",
-             round(100 * (o["cost"] / max(i["cost"], 1e-9) - 1), 1),
-             ref({"steady_low": "-16%", "fluctuating": "-6%",
-                  "steady_high": "~0%"})),
-            (bench, f"{kind}.opd_qos_vs_ipa_pct",
-             round(100 * _rel(o["qos"], i["qos"]), 1),
-             ref({"steady_low": "-3.8%", "fluctuating": "-3%",
-                  "steady_high": "~0%"})),
+            (
+                bench,
+                f"{kind}.opd_cost_vs_greedy_pct",
+                round(100 * (o["cost"] / max(g["cost"], 1e-09) - 1), 1),
+                ref(
+                    {"steady_low": "+120%", "fluctuating": "+37%", "steady_high": "~0%"}
+                ),
+            ),
+            (
+                bench,
+                f"{kind}.opd_qos_vs_greedy_pct",
+                round(100 * _rel(o["qos"], g["qos"]), 1),
+                ref(
+                    {"steady_low": "+36%", "fluctuating": "+21%", "steady_high": "~0%"}
+                ),
+            ),
+            (
+                bench,
+                f"{kind}.opd_cost_vs_ipa_pct",
+                round(100 * (o["cost"] / max(i["cost"], 1e-09) - 1), 1),
+                ref({"steady_low": "-16%", "fluctuating": "-6%", "steady_high": "~0%"}),
+            ),
+            (
+                bench,
+                f"{kind}.opd_qos_vs_ipa_pct",
+                round(100 * _rel(o["qos"], i["qos"]), 1),
+                ref(
+                    {"steady_low": "-3.8%", "fluctuating": "-3%", "steady_high": "~0%"}
+                ),
+            ),
         ]
-    save_results("fig45_workloads" + (f"_{cluster}" if cluster else ""),
-                 payload)
+    save_results("fig45_workloads" + (f"_{cluster}" if cluster else ""), payload)
     return rows
 
 
@@ -103,8 +124,11 @@ if __name__ == "__main__":
 
     from benchmarks.common import bench_main
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--cluster", default=None, choices=api.list_clusters(),
-                    help="place the pipeline on a registered cluster "
-                         "topology (default: homogeneous scalar pool)")
-    bench_main(run, parser=ap,
-               kwargs_from_args=lambda a: {"cluster": a.cluster})
+    ap.add_argument(
+        "--cluster",
+        default=None,
+        choices=api.list_clusters(),
+        help="place the pipeline on a registered cluster "
+        "topology (default: homogeneous scalar pool)",
+    )
+    bench_main(run, parser=ap, kwargs_from_args=lambda a: {"cluster": a.cluster})

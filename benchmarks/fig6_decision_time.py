@@ -12,17 +12,22 @@ from repro.core import IPAPolicy, OPDTrainer, PPOConfig, OPDPolicy, run_episode
 
 # four pipeline specs of growing decision-space size (stages x variants/stage)
 PIPELINES = [
-    PipelineSpec("P1-2stage", (("xlstm-125m", "whisper-small"),) * 2,
-                 quants=("bf16",)),
-    PipelineSpec("P2-3stage",
-                 (("xlstm-125m", "whisper-small", "llama3.2-1b"),) * 3,
-                 quants=("bf16", "int8")),
-    PipelineSpec("P3-4stage",
-                 (("xlstm-125m", "llama3.2-1b", "starcoder2-3b"),) * 4,
-                 quants=("bf16", "int8", "int4")),
-    PipelineSpec("P4-5stage",
-                 (("xlstm-125m", "llama3.2-1b", "starcoder2-3b"),) * 5,
-                 quants=("bf16", "int8", "int4")),
+    PipelineSpec("P1-2stage", (("xlstm-125m", "whisper-small"),) * 2, quants=("bf16",)),
+    PipelineSpec(
+        "P2-3stage",
+        (("xlstm-125m", "whisper-small", "llama3.2-1b"),) * 3,
+        quants=("bf16", "int8"),
+    ),
+    PipelineSpec(
+        "P3-4stage",
+        (("xlstm-125m", "llama3.2-1b", "starcoder2-3b"),) * 4,
+        quants=("bf16", "int8", "int4"),
+    ),
+    PipelineSpec(
+        "P4-5stage",
+        (("xlstm-125m", "llama3.2-1b", "starcoder2-3b"),) * 5,
+        quants=("bf16", "int8", "int4"),
+    ),
 ]
 
 
@@ -35,8 +40,7 @@ def run(quick: bool = False):
         name, pipe = spec.name, spec.build()
 
         def make_env(seed):
-            tr = make_trace("fluctuating", seed=seed,
-                            seconds=steps * 10)
+            tr = make_trace("fluctuating", seed=seed, seconds=steps * 10)
             return PipelineEnv(pipe, tr, seed=seed)
 
         # a briefly-trained policy: decision TIME does not depend on training
@@ -53,18 +57,32 @@ def run(quick: bool = False):
         n_configs = 1
         for t in pipe.tasks:
             n_configs *= len(t.variants) * pipe.f_max * pipe.b_max
-        payload[name] = {"ipa_H_s": h_ipa, "opd_H_s": h_opd,
-                         "opd_faster_pct": speedup_pct,
-                         "decision_space": n_configs}
-        rows.append(("fig6", f"{name}.opd_faster_pct", round(speedup_pct, 1),
-                     "paper: 32.5/53.5/111.6/212.8% growing with complexity"))
+        payload[name] = {
+            "ipa_H_s": h_ipa,
+            "opd_H_s": h_opd,
+            "opd_faster_pct": speedup_pct,
+            "decision_space": n_configs,
+        }
+        rows.append(
+            (
+                "fig6",
+                f"{name}.opd_faster_pct",
+                round(speedup_pct, 1),
+                "paper: 32.5/53.5/111.6/212.8% growing with complexity",
+            )
+        )
     # the headline property: IPA time grows with complexity, OPD stays flat
     ipas = [payload[s.name]["ipa_H_s"] for s in PIPELINES]
     opds = [payload[s.name]["opd_H_s"] for s in PIPELINES]
-    rows.append(("fig6", "ipa_H_growth_x", round(ipas[-1] / ipas[0], 2),
-                 "grows with pipeline complexity"))
-    rows.append(("fig6", "opd_H_growth_x", round(opds[-1] / opds[0], 2),
-                 "stays ~flat"))
+    rows.append(
+        (
+            "fig6",
+            "ipa_H_growth_x",
+            round(ipas[-1] / ipas[0], 2),
+            "grows with pipeline complexity",
+        )
+    )
+    rows.append(("fig6", "opd_H_growth_x", round(opds[-1] / opds[0], 2), "stays ~flat"))
     save_results("fig6_decision_time", payload)
     return rows
 

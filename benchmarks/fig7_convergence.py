@@ -28,14 +28,30 @@ def run(quick: bool = False):
     save_results("fig7_convergence", payload)
     return [
         ("fig7", "episodes", len(rewards), ""),
-        ("fig7", "reward_first_quarter", round(payload["reward_first_k"], 2),
-         "reward converges to a higher value"),
-        ("fig7", "reward_last_quarter", round(payload["reward_last_k"], 2),
-         "should exceed first quarter"),
-        ("fig7", "value_loss_first_quarter",
-         round(payload["value_loss_first_k"], 4), "value loss decreases"),
-        ("fig7", "value_loss_last_quarter",
-         round(payload["value_loss_last_k"], 4), "should be below first"),
+        (
+            "fig7",
+            "reward_first_quarter",
+            round(payload["reward_first_k"], 2),
+            "reward converges to a higher value",
+        ),
+        (
+            "fig7",
+            "reward_last_quarter",
+            round(payload["reward_last_k"], 2),
+            "should exceed first quarter",
+        ),
+        (
+            "fig7",
+            "value_loss_first_quarter",
+            round(payload["value_loss_first_k"], 4),
+            "value loss decreases",
+        ),
+        (
+            "fig7",
+            "value_loss_last_quarter",
+            round(payload["value_loss_last_k"], 4),
+            "should be below first",
+        ),
     ]
 
 

@@ -30,24 +30,42 @@ def table(mesh: str = "16x16"):
     rows = []
     for r in load_records(mesh):
         if r["status"] != "OK":
-            rows.append({"arch": r["arch"], "shape": r["shape"],
-                         "mesh": r["mesh"], "status": r["status"],
-                         "reason": r.get("reason", r.get("error", ""))})
+            rows.append(
+                {
+                    "arch": r["arch"],
+                    "shape": r["shape"],
+                    "mesh": r["mesh"],
+                    "status": r["status"],
+                    "reason": r.get("reason", r.get("error", "")),
+                }
+            )
             continue
         t = r["roofline"]
-        rows.append({
-            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
-            "status": "OK",
-            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
-            "collective_s": t["collective_s"], "dominant": t["dominant"],
-            "useful_flops_ratio": r["useful_flops_ratio"],
-            "peak_gb_per_dev": r["memory"]["peak_bytes"] / 1e9,
-            "step_time_bound_s": max(t["compute_s"], t["memory_s"],
-                                     t["collective_s"]),
-            "roofline_fraction": (t["compute_s"] /
-                                  max(t["compute_s"], t["memory_s"],
-                                      t["collective_s"], 1e-30)),
-        })
+        rows.append(
+            {
+                "arch": r["arch"],
+                "shape": r["shape"],
+                "mesh": r["mesh"],
+                "status": "OK",
+                "compute_s": t["compute_s"],
+                "memory_s": t["memory_s"],
+                "collective_s": t["collective_s"],
+                "dominant": t["dominant"],
+                "useful_flops_ratio": r["useful_flops_ratio"],
+                "peak_gb_per_dev": r["memory"]["peak_bytes"] / 1000000000.0,
+                "step_time_bound_s": max(
+                    t["compute_s"],
+                    t["memory_s"],
+                    t["collective_s"],
+                ),
+                "roofline_fraction": t["compute_s"] / max(
+                    t["compute_s"],
+                    t["memory_s"],
+                    t["collective_s"],
+                    1e-30,
+                ),
+            }
+        )
     ok = [x for x in rows if x["status"] == "OK"]
     ok.sort(key=lambda x: -x["step_time_bound_s"])
     return ok + [x for x in rows if x["status"] != "OK"]
@@ -64,17 +82,33 @@ def run(quick: bool = False):
     for x in oks:
         by_dom[x["dominant"]] = by_dom.get(x["dominant"], 0) + 1
     rows.append(("roofline", "records_ok", len(oks), "39 live combos"))
-    rows.append(("roofline", "dominant_split",
-                 "/".join(f"{k}:{v}" for k, v in sorted(by_dom.items())), ""))
+    rows.append(
+        (
+            "roofline",
+            "dominant_split",
+            "/".join((f"{k}:{v}" for (k, v) in sorted(by_dom.items()))),
+            "",
+        )
+    )
     worst = oks[0]
-    rows.append(("roofline", "slowest_pair",
-                 f"{worst['arch']}|{worst['shape']}",
-                 f"bound {worst['step_time_bound_s']:.3f}s "
-                 f"dom={worst['dominant']}"))
+    rows.append(
+        (
+            "roofline",
+            "slowest_pair",
+            f"{worst['arch']}|{worst['shape']}",
+            f"bound {worst['step_time_bound_s']:.3f}s dom={worst['dominant']}",
+        )
+    )
     best_frac = max(oks, key=lambda x: x["roofline_fraction"])
-    rows.append(("roofline", "best_compute_fraction",
-                 f"{best_frac['arch']}|{best_frac['shape']}"
-                 f"={best_frac['roofline_fraction']:.2f}", ""))
+    rows.append(
+        (
+            "roofline",
+            "best_compute_fraction",
+            f"{best_frac['arch']}|{best_frac['shape']}"
+            f"={best_frac['roofline_fraction']:.2f}",
+            "",
+        )
+    )
     return rows
 
 
@@ -95,18 +129,23 @@ def markdown(mesh: str = "16x16", baseline_dir: str | None = None) -> str:
         keep = DRYRUN_DIR
         DRYRUN_DIR = baseline_dir
         try:
-            base = {(x["arch"], x["shape"]): x for x in table(mesh)
-                    if x["status"] == "OK"}
+            base = {
+                (x["arch"], x["shape"]): x for x in table(mesh) if x["status"] == "OK"
+            }
         finally:
             DRYRUN_DIR = keep
-    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
-           "| useful | peak GB/dev |")
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| useful | peak GB/dev |"
+    )
     sep = "|---|---|---|---|---|---|---|---|"
     out = [hdr, sep]
     for x in rows:
         if x["status"] != "OK":
-            out.append(f"| {x['arch']} | {x['shape']} | — | — | — | "
-                       f"{x['status']}: {x['reason']} | — | — |")
+            out.append(
+                f"| {x['arch']} | {x['shape']} | — | — | — | "
+                f"{x['status']}: {x['reason']} | — | — |"
+            )
             continue
 
         def fmt(key, unit=1.0, nd=4):
@@ -120,5 +159,6 @@ def markdown(mesh: str = "16x16", baseline_dir: str | None = None) -> str:
             f"| {x['arch']} | {x['shape']} | {fmt('compute_s')} | "
             f"{fmt('memory_s')} | {fmt('collective_s')} | "
             f"{x['dominant'].replace('_s', '')} | "
-            f"{x['useful_flops_ratio']:.2f} | {x['peak_gb_per_dev']:.1f} |")
+            f"{x['useful_flops_ratio']:.2f} | {x['peak_gb_per_dev']:.1f} |"
+        )
     return "\n".join(out)

@@ -18,16 +18,26 @@ from benchmarks.common import bench_args
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="comma-separated subset: "
-                         "fig3,fig45,fig6,fig7,roofline,runtime,train,"
-                         "runtime_train,telemetry")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated subset: "
+        "fig3,fig45,fig6,fig7,roofline,runtime,train,"
+        "runtime_train,telemetry",
+    )
     args = bench_args(parser=ap)
 
-    from benchmarks import (fig3_predictor, fig45_workloads,
-                            fig6_decision_time, fig7_convergence, roofline,
-                            runtime_throughput, runtime_train_throughput,
-                            telemetry_queries, train_throughput)
+    from benchmarks import (
+        fig3_predictor,
+        fig45_workloads,
+        fig6_decision_time,
+        fig7_convergence,
+        roofline,
+        runtime_throughput,
+        runtime_train_throughput,
+        telemetry_queries,
+        train_throughput,
+    )
     suites = {
         "fig3": fig3_predictor.run,
         "fig45": fig45_workloads.run,

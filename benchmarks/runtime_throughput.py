@@ -23,9 +23,14 @@ def run(quick: bool = False):
     for name in SCENARIOS:
         exp = api.ExperimentSpec(
             pipeline=api.get_pipeline("serve3"),
-            scenario=api.replace(api.get_scenario(name), rate=25.0, seed=11,
-                                 horizon=horizon),
-            controller=api.get_controller("greedy"))
+            scenario=api.replace(
+                api.get_scenario(name),
+                rate=25.0,
+                seed=11,
+                horizon=horizon,
+            ),
+            controller=api.get_controller("greedy"),
+        )
         apply_wall, switches = [], 0
 
         def on_step(env, cfg, info):
@@ -36,8 +41,10 @@ def run(quick: bool = False):
         sess = api.Session.from_spec(exp)
         rep = sess.serve(on_step=on_step)
         summary, wall = rep["summary"], rep["serve_wall_s"]
-        effect_ms = [(d + a) * 1e3
-                     for d, a in zip(rep["decide_wall_s"], apply_wall)]
+        effect_ms = [
+            (d + a) * 1000.0
+            for (d, a) in zip(rep["decide_wall_s"], apply_wall, strict=True)
+        ]
         def ms(v):
             # summary percentiles are None (not NaN) when nothing completed
             return None if v is None else v * 1e3
@@ -46,8 +53,8 @@ def run(quick: bool = False):
             "submitted": summary["submitted"],
             "served": summary["served"],
             "virtual_rps": summary["throughput_rps"],
-            "wall_rps": summary["served"] / max(wall, 1e-9),
-            "sim_speedup_x": summary["virtual_now"] / max(wall, 1e-9),
+            "wall_rps": summary["served"] / max(wall, 1e-09),
+            "sim_speedup_x": summary["virtual_now"] / max(wall, 1e-09),
             "p50_ms": ms(summary["p50"]),
             "p95_ms": ms(summary["p95"]),
             "p99_ms": ms(summary["p99"]),
@@ -58,19 +65,34 @@ def run(quick: bool = False):
         }
         payload[name] = res
         rows += [
-            ("runtime", f"{name}.virtual_rps", round(res["virtual_rps"], 1),
-             "served request rate in virtual time"),
-            ("runtime", f"{name}.wall_rps", round(res["wall_rps"], 0),
-             "event-loop processing rate"),
-            ("runtime", f"{name}.p95_ms",
-             None if res["p95_ms"] is None else round(res["p95_ms"], 1),
-             "tail latency under the greedy controller"),
-            ("runtime", f"{name}.decision_to_effect_ms",
-             round(res["decision_to_effect_ms"], 2),
-             "controller invocation -> config live"),
+            (
+                "runtime",
+                f"{name}.virtual_rps",
+                round(res["virtual_rps"], 1),
+                "served request rate in virtual time",
+            ),
+            (
+                "runtime",
+                f"{name}.wall_rps",
+                round(res["wall_rps"], 0),
+                "event-loop processing rate",
+            ),
+            (
+                "runtime",
+                f"{name}.p95_ms",
+                None if res["p95_ms"] is None else round(res["p95_ms"], 1),
+                "tail latency under the greedy controller",
+            ),
+            (
+                "runtime",
+                f"{name}.decision_to_effect_ms",
+                round(res["decision_to_effect_ms"], 2),
+                "controller invocation -> config live",
+            ),
         ]
-        assert summary["served"] == summary["submitted"], \
-            f"{name}: dropped {summary['submitted'] - summary['served']} requests"
+        assert summary["served"] == summary[
+            "submitted"
+        ], f"{name}: dropped {summary['submitted'] - summary['served']} requests"
     save_results("runtime_throughput", payload)
     return rows
 

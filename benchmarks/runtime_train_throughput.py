@@ -73,21 +73,18 @@ def run(quick: bool = False):
     base_key = jax.random.PRNGKey(0)
     compile_s, vec_pass = {}, {}
     for n_envs in ENV_COUNTS:
-        eps = rv.stack_episodes([rv.episode_arrivals(arrivals(100 + i),
-                                                     horizon)
-                                 for i in range(n_envs)])
-        keys = jax.vmap(lambda s: jax.random.fold_in(base_key, s))(
-            np.arange(n_envs))
+        eps = rv.stack_episodes(
+            [rv.episode_arrivals(arrivals(100 + i), horizon) for i in range(n_envs)]
+        )
+        keys = jax.vmap(lambda s: jax.random.fold_in(base_key, s))(np.arange(n_envs))
         args = (tr.params, tables, eps, keys)
         t0 = time.perf_counter()
-        jax.block_until_ready(
-            rv.vec_rollout(*args, n_steps=n_steps, weights=weights))
+        jax.block_until_ready(rv.vec_rollout(*args, n_steps=n_steps, weights=weights))
         compile_s[n_envs] = time.perf_counter() - t0
 
         def one_pass(args=args):
             for _ in range(vec_reps):
-                out = rv.vec_rollout(*args, n_steps=n_steps,
-                                     weights=weights)
+                out = rv.vec_rollout(*args, n_steps=n_steps, weights=weights)
             jax.block_until_ready(out)
         vec_pass[n_envs] = one_pass
 
@@ -101,14 +98,18 @@ def run(quick: bool = False):
             vec_walls[n_envs].append(_timed(vec_pass[n_envs]))
 
     wall = min(legacy_walls)
-    legacy = {"episodes": legacy_eps, "wall_s": wall,
-              "episodes_per_s": legacy_eps / wall,
-              "steps_per_s": legacy_eps * n_steps / wall}
+    legacy = {
+        "episodes": legacy_eps,
+        "wall_s": wall,
+        "episodes_per_s": legacy_eps / wall,
+        "steps_per_s": legacy_eps * n_steps / wall,
+    }
     vec = {}
     for n_envs in ENV_COUNTS:
         wall = min(vec_walls[n_envs])
         vec[str(n_envs)] = {
-            "episodes": n_envs * vec_reps, "wall_s": wall,
+            "episodes": n_envs * vec_reps,
+            "wall_s": wall,
             "compile_s": compile_s[n_envs],
             "episodes_per_s": n_envs * vec_reps / wall,
             "steps_per_s": n_envs * vec_reps * n_steps / wall,
@@ -118,23 +119,44 @@ def run(quick: bool = False):
     speedup = vec[top]["episodes_per_s"] / legacy["episodes_per_s"]
     payload = {
         "mode": "quick" if quick else "full",
-        "pipeline": PIPELINE, "arrivals": {"kind": kind, "rate": rate},
-        "horizon": horizon, "steps_per_episode": n_steps,
-        "legacy": legacy, "vectorized": vec,
+        "pipeline": PIPELINE,
+        "arrivals": {"kind": kind, "rate": rate},
+        "horizon": horizon,
+        "steps_per_episode": n_steps,
+        "legacy": legacy,
+        "vectorized": vec,
         "speedup_episodes_at_32": speedup,
-        "jax": jax.__version__, "python": platform.python_version(),
+        "jax": jax.__version__,
+        "python": platform.python_version(),
         "device": jax.devices()[0].platform,
     }
     save_results("runtime_train_throughput", payload)
 
-    rows = [("runtime_train_throughput", "legacy.episodes_per_s",
-             round(legacy["episodes_per_s"], 2), "")]
+    rows = [
+        (
+            "runtime_train_throughput",
+            "legacy.episodes_per_s",
+            round(legacy["episodes_per_s"], 2),
+            "",
+        )
+    ]
     for n_envs in ENV_COUNTS:
-        rows.append(("runtime_train_throughput",
-                     f"vec{n_envs}.episodes_per_s",
-                     round(vec[str(n_envs)]["episodes_per_s"], 2), ""))
-    rows.append(("runtime_train_throughput", "speedup_episodes_at_32",
-                 round(speedup, 1), ">= 20x legacy loop (ISSUE 6)"))
+        rows.append(
+            (
+                "runtime_train_throughput",
+                f"vec{n_envs}.episodes_per_s",
+                round(vec[str(n_envs)]["episodes_per_s"], 2),
+                "",
+            )
+        )
+    rows.append(
+        (
+            "runtime_train_throughput",
+            "speedup_episodes_at_32",
+            round(speedup, 1),
+            ">= 20x legacy loop (ISSUE 6)",
+        )
+    )
     return rows
 
 

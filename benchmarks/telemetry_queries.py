@@ -67,11 +67,19 @@ def run(quick: bool = False):
     from repro.cluster import RuntimeEnv
     exp = api.ExperimentSpec(
         pipeline=api.get_pipeline("serve3"),
-        scenario=api.replace(api.get_scenario("bursty"), rate=25.0, seed=11,
-                             horizon=60 if quick else 180),
-        controller=api.get_controller("greedy"))
-    env = RuntimeEnv(exp.pipeline.build(), exp.scenario.build_arrivals(),
-                     horizon=exp.scenario.horizon)
+        scenario=api.replace(
+            api.get_scenario("bursty"),
+            rate=25.0,
+            seed=11,
+            horizon=60 if quick else 180,
+        ),
+        controller=api.get_controller("greedy"),
+    )
+    env = RuntimeEnv(
+        exp.pipeline.build(),
+        exp.scenario.build_arrivals(),
+        horizon=exp.scenario.horizon,
+    )
     done = False
     while not done:
         _, _, done, _ = env.step(env.default_config())
@@ -79,23 +87,39 @@ def run(quick: bool = False):
 
     assert ratio < MAX_FLAT_RATIO, (
         f"interval-query cost grew {ratio:.1f}x across a {GROWTH}x record "
-        f"growth (limit {MAX_FLAT_RATIO}x) — queries are no longer flat")
+        f"growth (limit {MAX_FLAT_RATIO}x) — queries are no longer flat"
+    )
 
-    payload = {"small_records": small_n, "large_records": large_n,
-               "per_query_us_small": small * 1e6,
-               "per_query_us_large": large * 1e6,
-               "cost_ratio": ratio, "max_flat_ratio": MAX_FLAT_RATIO,
-               "per_query_us_live_run": live * 1e6}
+    payload = {
+        "small_records": small_n,
+        "large_records": large_n,
+        "per_query_us_small": small * 1000000.0,
+        "per_query_us_large": large * 1000000.0,
+        "cost_ratio": ratio,
+        "max_flat_ratio": MAX_FLAT_RATIO,
+        "per_query_us_live_run": live * 1000000.0,
+    }
     save_results("telemetry_queries", payload)
     return [
-        ("telemetry", "per_query_us_small", round(small * 1e6, 2),
-         f"{small_n} records"),
-        ("telemetry", "per_query_us_large", round(large * 1e6, 2),
-         f"{large_n} records"),
-        ("telemetry", "cost_ratio", round(ratio, 2),
-         f"flat gate: < {MAX_FLAT_RATIO}"),
-        ("telemetry", "per_query_us_live_run", round(live * 1e6, 2),
-         "queries after a closed-loop runtime run"),
+        (
+            "telemetry",
+            "per_query_us_small",
+            round(small * 1000000.0, 2),
+            f"{small_n} records",
+        ),
+        (
+            "telemetry",
+            "per_query_us_large",
+            round(large * 1000000.0, 2),
+            f"{large_n} records",
+        ),
+        ("telemetry", "cost_ratio", round(ratio, 2), f"flat gate: < {MAX_FLAT_RATIO}"),
+        (
+            "telemetry",
+            "per_query_us_live_run",
+            round(live * 1000000.0, 2),
+            "queries after a closed-loop runtime run",
+        ),
     ]
 
 

@@ -39,8 +39,7 @@ def run(quick: bool = False):
     pipe = api.get_pipeline(PIPELINE).build()
 
     def make_env(seed):
-        return PipelineEnv(pipe, scen.train_trace(seed, seconds=seconds),
-                           seed=seed)
+        return PipelineEnv(pipe, scen.train_trace(seed, seconds=seconds), seed=seed)
 
     tr = OPDTrainer(pipe, make_env, ppo=PPOConfig(), seed=0)
     env0 = make_env(0)
@@ -52,9 +51,12 @@ def run(quick: bool = False):
     for e in range(1, legacy_eps + 1):
         tr._rollout(make_env(e), False)
     wall = time.perf_counter() - t0
-    legacy = {"episodes": legacy_eps, "wall_s": wall,
-              "episodes_per_s": legacy_eps / wall,
-              "steps_per_s": legacy_eps * n_steps / wall}
+    legacy = {
+        "episodes": legacy_eps,
+        "wall_s": wall,
+        "episodes_per_s": legacy_eps / wall,
+        "steps_per_s": legacy_eps * n_steps / wall,
+    }
 
     # -- vectorized engine: scan episodes, vmap envs ---------------------
     tables = vecenv.tables_from_pipeline(pipe)
@@ -64,13 +66,14 @@ def run(quick: bool = False):
     for n_envs in ENV_COUNTS:
         traces = jnp.asarray(
             np.stack([make_env(100 + i).trace for i in range(n_envs)]),
-            jnp.float32)
-        keys = jax.vmap(lambda s: jax.random.fold_in(base_key, s))(
-            jnp.arange(n_envs))
+            jnp.float32,
+        )
+        keys = jax.vmap(lambda s: jax.random.fold_in(base_key, s))(jnp.arange(n_envs))
         args = (tr.params, tables, traces, keys)
         t0 = time.perf_counter()
         jax.block_until_ready(
-            vecenv.vec_rollout(*args, n_steps=n_steps, weights=weights))
+            vecenv.vec_rollout(*args, n_steps=n_steps, weights=weights)
+        )
         compile_s = time.perf_counter() - t0
         t0 = time.perf_counter()
         for _ in range(vec_reps):
@@ -78,7 +81,8 @@ def run(quick: bool = False):
         jax.block_until_ready(out)
         wall = time.perf_counter() - t0
         vec[str(n_envs)] = {
-            "episodes": n_envs * vec_reps, "wall_s": wall,
+            "episodes": n_envs * vec_reps,
+            "wall_s": wall,
             "compile_s": compile_s,
             "episodes_per_s": n_envs * vec_reps / wall,
             "steps_per_s": n_envs * vec_reps * n_steps / wall,
@@ -88,22 +92,38 @@ def run(quick: bool = False):
     speedup = vec[top]["episodes_per_s"] / legacy["episodes_per_s"]
     payload = {
         "mode": "quick" if quick else "full",
-        "pipeline": PIPELINE, "scenario": SCENARIO,
+        "pipeline": PIPELINE,
+        "scenario": SCENARIO,
         "steps_per_episode": n_steps,
-        "legacy": legacy, "vectorized": vec,
+        "legacy": legacy,
+        "vectorized": vec,
         "speedup_episodes_at_32": speedup,
-        "jax": jax.__version__, "python": platform.python_version(),
+        "jax": jax.__version__,
+        "python": platform.python_version(),
         "device": jax.devices()[0].platform,
     }
     save_results("train_throughput", payload)
 
-    rows = [("train_throughput", "legacy.steps_per_s",
-             round(legacy["steps_per_s"], 1), "")]
+    rows = [
+        ("train_throughput", "legacy.steps_per_s", round(legacy["steps_per_s"], 1), "")
+    ]
     for n_envs in ENV_COUNTS:
-        rows.append(("train_throughput", f"vec{n_envs}.steps_per_s",
-                     round(vec[str(n_envs)]["steps_per_s"], 1), ""))
-    rows.append(("train_throughput", "speedup_episodes_at_32",
-                 round(speedup, 1), ">= 10x legacy loop (ISSUE 3)"))
+        rows.append(
+            (
+                "train_throughput",
+                f"vec{n_envs}.steps_per_s",
+                round(vec[str(n_envs)]["steps_per_s"], 1),
+                "",
+            )
+        )
+    rows.append(
+        (
+            "train_throughput",
+            "speedup_episodes_at_32",
+            round(speedup, 1),
+            ">= 10x legacy loop (ISSUE 3)",
+        )
+    )
     return rows
 
 

@@ -1,0 +1,24 @@
+"""repro.analysis: reprolint static checks + the checkify runtime sanitizer.
+
+The static side (``framework``, ``rules``, ``cli``) is stdlib-only so the
+CI lint job can run ``python -m repro.analysis`` without a jax install.
+``repro.analysis.sanitize`` (the checkify wiring) imports jax and is
+deliberately *not* imported here — import it explicitly where needed.
+"""
+from repro.analysis import rules  # noqa: F401  (registers the rule set)
+from repro.analysis.framework import (ERROR, RULES, WARNING, Finding, Rule,
+                                      SourceModule, analyze_source, register,
+                                      run)
+
+__all__ = [
+    "ERROR",
+    "WARNING",
+    "Finding",
+    "Rule",
+    "RULES",
+    "SourceModule",
+    "analyze_source",
+    "register",
+    "rules",
+    "run",
+]

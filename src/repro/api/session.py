@@ -12,11 +12,13 @@ reloading it reproduces the run bit-for-bit.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import time
 
 import numpy as np
 
+from repro.analysis import sanitize
 from repro.cluster.env import PipelineEnv, RuntimeEnv
 from repro.core.controller import decide
 from repro.core.ppo import OPDTrainer, PPOConfig
@@ -40,23 +42,33 @@ def build_executors(spec: ExperimentSpec):
 
 
 class Session:
-    def __init__(self, spec: ExperimentSpec):
+    def __init__(self, spec: ExperimentSpec, *, debug_checkify: bool = False):
         self.spec = spec
         self.pipe = spec.pipeline.build()
         self.trainer: OPDTrainer | None = None
         self.controller = None
         self._params = None
         self._report: dict | None = None
+        # debug toggle: run every twin rollout under the checkify sanitizer
+        # (NaN / div / OOB surface as JaxRuntimeError instead of reward
+        # drift) — see repro.analysis.sanitize; also reachable via the
+        # REPRO_CHECKIFY=1 env flag without touching call sites
+        self.debug_checkify = debug_checkify
+
+    def _sanitize_scope(self):
+        return (sanitize.enabled_scope(True) if self.debug_checkify
+                else contextlib.nullcontext())
 
     # ------------------------------------------------------------ creation --
 
     @classmethod
-    def from_spec(cls, spec: ExperimentSpec | dict | str) -> "Session":
+    def from_spec(cls, spec: ExperimentSpec | dict | str, *,
+                  debug_checkify: bool = False) -> Session:
         if isinstance(spec, str):
             spec = json.loads(spec)
         if isinstance(spec, dict):
             spec = ExperimentSpec.from_dict(spec)
-        return cls(spec)
+        return cls(spec, debug_checkify=debug_checkify)
 
     # ------------------------------------------------------------ training --
 
@@ -64,7 +76,7 @@ class Session:
     def trainable(self) -> bool:
         return self.spec.controller.name in _TRAINABLE
 
-    def train(self, episodes: int | None = None, *, log=None) -> "Session":
+    def train(self, episodes: int | None = None, *, log=None) -> Session:
         """Run PPO training for learned controllers; no-op for baselines.
         The controller's ``train_backend`` picks what on-policy episodes
         roll on: "analytic" steps the closed-form ``PipelineEnv`` (optionally
@@ -93,12 +105,13 @@ class Session:
                 ppo=PPOConfig(expert_freq=c.expert_freq), seed=c.seed,
                 num_envs=c.num_envs,
                 vec_runtime=scen.train_arrivals if runtime_backend else None)
-        for ep in range(1, episodes + 1):
-            self.trainer.train_episode(ep, env_seed=ep)
-            if log:
-                h = self.trainer.history
-                log(f"episode {ep}: reward={h['reward'][-1]:9.2f} "
-                    f"loss={h['loss'][-1]:7.3f} expert={h['expert'][-1]}")
+        with self._sanitize_scope():
+            for ep in range(1, episodes + 1):
+                self.trainer.train_episode(ep, env_seed=ep)
+                if log:
+                    h = self.trainer.history
+                    log(f"episode {ep}: reward={h['reward'][-1]:9.2f} "
+                        f"loss={h['loss'][-1]:7.3f} expert={h['expert'][-1]}")
         self.controller = None          # params changed -> rebuild on serve
         return self
 
@@ -115,7 +128,7 @@ class Session:
                               seq_len=spec.seq_len)
         raise ValueError(f"unknown backend {spec.backend!r}")
 
-    def with_params(self, params) -> "Session":
+    def with_params(self, params) -> Session:
         """Attach pre-trained policy params (skips in-session training) —
         lets callers share one trained agent across many sessions."""
         self._params = params
@@ -153,17 +166,18 @@ class Session:
         rewards, configs, decide_walls = [], [], []
         wall0 = time.perf_counter()
         done = False
-        while not done:
-            t0 = time.perf_counter()
-            cfg = decide(controller, env)
-            decide_walls.append(time.perf_counter() - t0)
-            _, r, done, info = env.step(cfg)
-            rewards.append(float(r))
-            configs.append([list(cfg.z), list(cfg.f), list(cfg.b)])
-            for k in _STEP_KEYS:
-                steps[k].append(float(info[k]))
-            if on_step:
-                on_step(env, cfg, info)
+        with self._sanitize_scope():
+            while not done:
+                t0 = time.perf_counter()
+                cfg = decide(controller, env)
+                decide_walls.append(time.perf_counter() - t0)
+                _, r, done, info = env.step(cfg)
+                rewards.append(float(r))
+                configs.append([list(cfg.z), list(cfg.f), list(cfg.b)])
+                for k in _STEP_KEYS:
+                    steps[k].append(float(info[k]))
+                if on_step:
+                    on_step(env, cfg, info)
         summary = env.drain() if hasattr(env, "drain") else {}
         if hasattr(env, "runtime"):
             summary["submitted"] = env.submitted

@@ -39,7 +39,7 @@ class NodeSpec:
         return asdict(self)
 
     @classmethod
-    def from_dict(cls, d: dict) -> "NodeSpec":
+    def from_dict(cls, d: dict) -> NodeSpec:
         return cls(name=d["name"], capacity=float(d["capacity"]),
                    speed=float(d.get("speed", 1.0)),
                    device_class=str(d.get("device_class", "edge")))
@@ -66,7 +66,7 @@ class ClusterSpec:
         return asdict(self)
 
     @classmethod
-    def from_dict(cls, d: dict) -> "ClusterSpec":
+    def from_dict(cls, d: dict) -> ClusterSpec:
         return cls(name=d["name"],
                    nodes=tuple(NodeSpec.from_dict(n) for n in d["nodes"]),
                    hop_latency=float(d.get("hop_latency", 0.0)))
@@ -101,7 +101,7 @@ class PipelineSpec:
         return asdict(self)
 
     @classmethod
-    def from_dict(cls, d: dict) -> "PipelineSpec":
+    def from_dict(cls, d: dict) -> PipelineSpec:
         cluster = d.get("cluster")
         return cls(name=d["name"],
                    stages=tuple(tuple(s) for s in d["stages"]),
@@ -158,7 +158,7 @@ class ScenarioSpec:
         return asdict(self)
 
     @classmethod
-    def from_dict(cls, d: dict) -> "ScenarioSpec":
+    def from_dict(cls, d: dict) -> ScenarioSpec:
         return cls(kind=d["kind"], rate=float(d.get("rate", 25.0)),
                    seed=int(d.get("seed", 0)),
                    horizon=int(d.get("horizon", 120)))
@@ -185,7 +185,7 @@ class ControllerSpec:
         return asdict(self)
 
     @classmethod
-    def from_dict(cls, d: dict) -> "ControllerSpec":
+    def from_dict(cls, d: dict) -> ControllerSpec:
         return cls(name=d["name"], seed=int(d.get("seed", 0)),
                    greedy=bool(d.get("greedy", True)),
                    train_episodes=int(d.get("train_episodes", 0)),
@@ -216,7 +216,7 @@ class ExperimentSpec:
                 "seq_len": self.seq_len}
 
     @classmethod
-    def from_dict(cls, d: dict) -> "ExperimentSpec":
+    def from_dict(cls, d: dict) -> ExperimentSpec:
         return cls(pipeline=PipelineSpec.from_dict(d["pipeline"]),
                    scenario=ScenarioSpec.from_dict(d["scenario"]),
                    controller=ControllerSpec.from_dict(d["controller"]),

@@ -59,7 +59,8 @@ class _ConfigEnvBase:
             pl = placement_for(pipe, cfg)
             node_free = [(node.capacity - used) / node.capacity
                          for node, used in zip(pipe.topo.nodes,
-                                               pl.node_usage)]
+                                               pl.node_usage,
+                                               strict=True)]
         else:
             node_free = []
         rows = []

@@ -83,7 +83,7 @@ class ClusterTopology:
 
     @classmethod
     def homogeneous(cls, w_max: float, *,
-                    name: str = "homogeneous") -> "ClusterTopology":
+                    name: str = "homogeneous") -> ClusterTopology:
         """The paper's single scalar pool as a topology."""
         return cls(name=name, nodes=(Node("edge-0", float(w_max)),))
 
@@ -97,7 +97,7 @@ class ClusterTopology:
         return _place_cached(self, tuple(float(r) for r in resources),
                              tuple(int(f) for f in replicas))
 
-    def cursor(self) -> "PlacementCursor":
+    def cursor(self) -> PlacementCursor:
         return PlacementCursor(self)
 
 
@@ -110,7 +110,7 @@ def _place_cached(topo: ClusterTopology, resources: tuple[float, ...],
     usage = [0.0] * K
     overflow = 0.0
     stage_nodes, speed_sum, min_speed, primary = [], [], [], []
-    for w, f in zip(resources, replicas):
+    for w, f in zip(resources, replicas, strict=True):
         assigned = []
         counts = [0] * K
         for _ in range(f):
@@ -129,7 +129,7 @@ def _place_cached(topo: ClusterTopology, resources: tuple[float, ...],
         speed_sum.append(sum(speeds[k] for k in assigned))
         min_speed.append(min((speeds[k] for k in assigned), default=1.0))
         primary.append(max(range(K), key=lambda k: (counts[k], -k)))
-    n_hops = sum(1 for a, b in zip(primary, primary[1:]) if a != b)
+    n_hops = sum(1 for a, b in zip(primary, primary[1:], strict=False) if a != b)
     return Placement(nodes=tuple(stage_nodes), node_usage=tuple(usage),
                      overflow=overflow, stage_speed_sum=tuple(speed_sum),
                      stage_min_speed=tuple(min_speed), primary=tuple(primary),

@@ -36,7 +36,7 @@ def abstract_mesh(shape, axes):
     try:
         return AbstractMesh(tuple(shape), tuple(axes))
     except TypeError:
-        return AbstractMesh(tuple(zip(axes, shape)))
+        return AbstractMesh(tuple(zip(axes, shape, strict=True)))
 
 
 def use_mesh(mesh):
@@ -61,8 +61,7 @@ def pallas_tpu_compiler_params(**kwargs):
     """Pallas TPU compiler params: ``CompilerParams`` on new jax,
     ``TPUCompilerParams`` on older releases."""
     from jax.experimental.pallas import tpu as pltpu
-    cls = getattr(pltpu, "CompilerParams", None) \
-        or getattr(pltpu, "TPUCompilerParams")
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
     return cls(**kwargs)
 
 

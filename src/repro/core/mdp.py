@@ -69,7 +69,7 @@ class Pipeline:
     b_max: int = 32
     w_max: float = 64.0      # total device resource capacity W_max
     # None = the legacy homogeneous scalar pool of capacity w_max
-    topology: "ClusterTopology | None" = field(default=None)
+    topology: ClusterTopology | None = field(default=None)
 
     @property
     def n_tasks(self) -> int:
@@ -82,7 +82,7 @@ class Pipeline:
         return self.topology is None or self.topology.trivial
 
     @property
-    def topo(self) -> "ClusterTopology":
+    def topo(self) -> ClusterTopology:
         """The cluster topology, materializing the implicit homogeneous
         single-node one when none was declared."""
         if self.topology is not None:
@@ -144,7 +144,7 @@ def stage_latency(var: ModelVariant, b: int, f: int, demand: float, *,
     return wait + service * congestion
 
 
-def placement_for(pipe: Pipeline, cfg: Config) -> "Placement":
+def placement_for(pipe: Pipeline, cfg: Config) -> Placement:
     """The deterministic placement of ``cfg``'s replicas on the pipeline's
     cluster topology (memoized per (topology, resources, replicas))."""
     res = tuple(task.variants[cfg.z[n]].resource

@@ -12,7 +12,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+import numpy as np  # reprolint: ignore[RPL002] host-side action<->config translation only, never under jit
 
 from repro import nn
 from repro.core.features import FEATURE_DIM, extract, init_features
@@ -33,7 +33,7 @@ def init_policy(key, state_dim: int, sizes: tuple[int, ...]):
     return {
         "features": init_features(ks[0], state_dim),
         "heads": [nn.init_linear(k, FEATURE_DIM, s, bias=True, scale=0.01)
-                  for k, s in zip(ks[1:-1], sizes)],
+                  for k, s in zip(ks[1:-1], sizes, strict=True)],
         "value": nn.init_linear(ks[-1], FEATURE_DIM, 1, bias=True, scale=0.01),
     }
 
@@ -52,7 +52,7 @@ def sample_action(params, state, key, *, greedy: bool = False):
     logits, value = apply_policy(params, state[None])
     idxs, logps = [], []
     keys = jax.random.split(key, len(logits))
-    for lg, k in zip(logits, keys):
+    for lg, k in zip(logits, keys, strict=True):
         lg = lg[0]
         logp = jax.nn.log_softmax(lg)
         idx = jnp.argmax(lg) if greedy else jax.random.categorical(k, lg)

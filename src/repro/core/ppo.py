@@ -24,7 +24,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+import numpy as np  # reprolint: ignore[RPL002] host-side batch assembly/logging only, never under jit
 
 from repro.core import runtime_vec
 from repro.core.expert import ExpertPolicy

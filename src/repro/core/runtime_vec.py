@@ -87,8 +87,9 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+import numpy as np  # reprolint: ignore[RPL002] host-side arrival-array prep only (episode_arrivals/stack_episodes)
 
+from repro.analysis import sanitize
 from repro.core.mdp import (ADAPTATION_INTERVAL, COLD_START_FRACTION,
                             QoSWeights)
 from repro.core.policy import apply_policy, sample_action
@@ -646,6 +647,9 @@ def rollout(params, tables: PipelineTables, ep: EpisodeArrivals,
     return jax.tree.map(lambda x: x[0], traj)
 
 
+# NaN + div only: checkify's OOB rule can't transform the batched
+# dynamic_update_slice in the vmapped event loop on jax 0.4.x
+@sanitize.checked(errors=sanitize.NAN_DIV_ERRORS)
 @partial(jax.jit, static_argnames=("n_steps", "weights", "max_wait",
                                    "greedy"))
 def vec_rollout(params, tables: PipelineTables, eps: EpisodeArrivals,
@@ -692,6 +696,8 @@ def vec_rollout(params, tables: PipelineTables, eps: EpisodeArrivals,
     return traj
 
 
+# NaN + div only — same OOB-rule limitation as vec_rollout above
+@sanitize.checked(errors=sanitize.NAN_DIV_ERRORS)
 @partial(jax.jit, static_argnames=("n_steps", "weights", "max_wait"))
 def replay(tables: PipelineTables, ep: EpisodeArrivals, actions: jax.Array,
            *, n_steps: int, weights: QoSWeights,

@@ -27,8 +27,9 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+import numpy as np  # reprolint: ignore[RPL002] host-side table building only (tables_from_pipeline)
 
+from repro.analysis import sanitize
 from repro.core.mdp import (ADAPTATION_INTERVAL, COLD_START_FRACTION,
                             Pipeline, QoSWeights)
 from repro.core.policy import apply_policy, sample_action
@@ -292,6 +293,7 @@ def step(tables: PipelineTables, state: EnvState, action: jax.Array,
     return new_state, observe(tables, new_state, trace), reward, metrics
 
 
+@sanitize.checked
 def rollout(params, tables: PipelineTables, trace: jax.Array, key: jax.Array,
             *, n_steps: int, weights: QoSWeights, greedy: bool = False):
     """One on-policy episode via ``lax.scan``: sample action, step the env,
@@ -317,6 +319,7 @@ def rollout(params, tables: PipelineTables, trace: jax.Array, key: jax.Array,
     return traj
 
 
+@sanitize.checked
 @partial(jax.jit, static_argnames=("n_steps", "weights", "greedy"))
 def vec_rollout(params, tables: PipelineTables, traces: jax.Array,
                 keys: jax.Array, *, n_steps: int, weights: QoSWeights,

@@ -173,7 +173,7 @@ def param_shardings(cfg: ArchConfig, mesh, *, multi_pod: bool = False,
         full = (None,) * pre + tuple(spec)
         assert len(full) == len(leaf.shape), (p, leaf.shape, full)
         # verify divisibility, fall back to replication otherwise
-        for dim, ax in zip(leaf.shape, full):
+        for dim, ax in zip(leaf.shape, full, strict=True):
             if ax is not None and dim % mesh.shape[ax] != 0:
                 return NamedSharding(mesh, P())
         return NamedSharding(mesh, P(*full))
@@ -198,7 +198,7 @@ def opt_shardings(cfg: ArchConfig, mesh, *, multi_pod: bool = False):
         spec = list((None,) * pre + tuple(_leaf_rule(cfg, M, p,
                                                      leaf.shape[pre:])))
         # fall back to replicated-base like param_shardings
-        for dim, ax in zip(leaf.shape, spec):
+        for dim, ax in zip(leaf.shape, spec, strict=True):
             if ax is not None and (dim % mesh.shape[ax] != 0
                                    if isinstance(ax, str) else False):
                 spec = [None] * len(leaf.shape)
@@ -216,7 +216,7 @@ def opt_shardings(cfg: ArchConfig, mesh, *, multi_pod: bool = False):
                     spec[i] = free_dp
                     break
         # validate composite dims
-        for dim, ax in zip(leaf.shape, spec):
+        for dim, ax in zip(leaf.shape, spec, strict=True):
             if ax is None:
                 continue
             axes = (ax,) if isinstance(ax, str) else tuple(ax)

@@ -46,10 +46,10 @@ class ArchConfig:
     def param_dtype(self):
         return jnp.dtype(self.dtype)
 
-    def replace(self, **kw) -> "ArchConfig":
+    def replace(self, **kw) -> ArchConfig:
         return dataclasses.replace(self, **kw)
 
-    def smoke(self) -> "ArchConfig":
+    def smoke(self) -> ArchConfig:
         """Reduced variant of the same family for CPU smoke tests."""
         d = min(self.d_model, 256)
         heads = 4

@@ -75,7 +75,8 @@ def init_cache(cfg: ArchConfig, batch: int, context: int, *, dtype=None):
 def decode_step(params, batch, cache, cfg: ArchConfig, *, ring: bool = False):
     h = nn.embedding(params["embed"], batch["tokens"])
     new_states = []
-    for i, (lp, st) in enumerate(zip(params["layers"], cache["states"])):
+    for i, (lp, st) in enumerate(zip(params["layers"], cache["states"],
+                                     strict=True)):
         if is_slstm(cfg, i):
             y, new = nn.slstm_decode(lp["slstm"], nn.rmsnorm(lp["ln"], h), st,
                                      n_heads=cfg.n_heads)

@@ -158,8 +158,8 @@ def attention_decode(params, x, cache, *, n_heads: int, n_kv: int, head_dim: int
     bidx = jnp.arange(B)
     # write in CACHE dtype: rope returns f32, and .at[].set would otherwise
     # promote the whole [B, C, kv, hd] buffer to f32 (2x HBM + converts)
-    new_k = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
-    new_v = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    new_k = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))  # reprolint: ignore[RPL005] canonical decode-path KV slot write, not vmapped over the cache
+    new_v = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))  # reprolint: ignore[RPL005] canonical decode-path KV slot write, not vmapped over the cache
     # valid slots: contiguous -> [0, pos]; ring -> min(pos+1, C) most recent
     n_valid = jnp.minimum(pos + 1, C)                    # [B]
     mask = jnp.arange(C)[None, :] < n_valid[:, None]     # [B, C]

@@ -133,7 +133,7 @@ class ServingRuntime:
     @classmethod
     def from_pipeline(cls, pipe: Pipeline, *, cfg: Config | None = None,
                       max_wait: float = DEFAULT_MAX_WAIT, seq_len: int = 32,
-                      executors: list | None = None) -> "ServingRuntime":
+                      executors: list | None = None) -> ServingRuntime:
         """Stages mirror ``pipe``'s tasks; initial knobs from ``cfg``
         (default: cheapest variant, 1 replica, batch 1). Replicas are placed
         on ``pipe``'s cluster topology by the shared first-fit scheduler."""
@@ -158,7 +158,7 @@ class ServingRuntime:
                                     * self._node_repl[k])
         self._node_since = self.now
         counts = [0] * len(self._node_repl)
-        for stage, nodes in zip(self.stages, pl.nodes):
+        for stage, nodes in zip(self.stages, pl.nodes, strict=True):
             stage.replica_nodes = tuple(nodes)
             stage.replica_speeds = tuple(speeds[k] for k in nodes)
             for k in nodes:
@@ -209,7 +209,7 @@ class ServingRuntime:
             self._install_placement(pl)
             self.last_migrations = sum(
                 _migrations(old, stage.replica_nodes)
-                for old, stage in zip(old_nodes, self.stages))
+                for old, stage in zip(old_nodes, self.stages, strict=True))
             self.migration_count += self.last_migrations
         self.switch_count += switched
         self.telemetry.record_reconfig(self.now, switched)
@@ -357,13 +357,15 @@ class ServingRuntime:
 
     def node_replica_seconds(self) -> list[float]:
         return [acc + (self.now - self._node_since) * n
-                for acc, n in zip(self._node_accum, self._node_repl)]
+                for acc, n in zip(self._node_accum, self._node_repl,
+                                  strict=True)]
 
     def node_utilization(self) -> list[float]:
         """Per-node busy replica-seconds over available replica-seconds."""
         return [busy / max(cap, 1e-9)
                 for busy, cap in zip(self.node_busy,
-                                     self.node_replica_seconds())]
+                                     self.node_replica_seconds(),
+                                     strict=True)]
 
     def summary(self) -> dict:
         out = self.telemetry.summary(

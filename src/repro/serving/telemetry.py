@@ -147,5 +147,6 @@ class Telemetry:
         if stage_busy is not None and stage_capacity is not None:
             out["utilization"] = [busy / max(cap, 1e-9)
                                   for busy, cap in zip(stage_busy,
-                                                       stage_capacity)]
+                                                       stage_capacity,
+                                                       strict=True)]
         return out

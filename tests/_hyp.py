@@ -27,13 +27,11 @@ except ModuleNotFoundError:
     class _Strategies:
         @staticmethod
         def integers(min_value, max_value):
-            return _Strategy(
-                lambda rng: int(rng.integers(min_value, max_value + 1)))
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
 
         @staticmethod
         def floats(min_value, max_value):
-            return _Strategy(
-                lambda rng: float(rng.uniform(min_value, max_value)))
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
 
         @staticmethod
         def sampled_from(elements):
@@ -42,14 +40,16 @@ except ModuleNotFoundError:
 
         @staticmethod
         def tuples(*strategies):
-            return _Strategy(
-                lambda rng: tuple(s.draw(rng) for s in strategies))
+            return _Strategy(lambda rng: tuple((s.draw(rng) for s in strategies)))
 
         @staticmethod
         def lists(strategy, min_size=0, max_size=10):
-            return _Strategy(lambda rng: [
-                strategy.draw(rng)
-                for _ in range(int(rng.integers(min_size, max_size + 1)))])
+            return _Strategy(
+                lambda rng: [
+                    strategy.draw(rng)
+                    for _ in range(int(rng.integers(min_size, max_size + 1)))
+                ]
+            )
 
     st = _Strategies()
 
@@ -57,9 +57,10 @@ except ModuleNotFoundError:
         def deco(fn):
             def wrapper(*args, **kwargs):
                 rng = np.random.default_rng(0)
-                n = min(getattr(wrapper, "_max_examples",
-                                _FALLBACK_MAX_EXAMPLES),
-                        _FALLBACK_MAX_EXAMPLES)
+                n = min(
+                    getattr(wrapper, "_max_examples", _FALLBACK_MAX_EXAMPLES),
+                    _FALLBACK_MAX_EXAMPLES,
+                )
                 for _ in range(n):
                     fn(*args, *(s.draw(rng) for s in strategies), **kwargs)
             # copy identity WITHOUT functools.wraps: __wrapped__ would make

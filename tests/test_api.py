@@ -8,8 +8,14 @@ import pytest
 
 from repro import api
 from repro.cluster import PipelineEnv, default_pipeline, make_trace
-from repro.core import (GreedyPolicy, IPAPolicy, RandomPolicy,
-                        action_to_config, config_to_action, head_sizes)
+from repro.core import (
+    GreedyPolicy,
+    IPAPolicy,
+    RandomPolicy,
+    action_to_config,
+    config_to_action,
+    head_sizes,
+)
 from repro.core.controller import Observation
 from repro.core.mdp import feasible
 from repro.serving.arrivals import arrivals_from_dict, make_arrivals
@@ -34,16 +40,16 @@ class TestSpecRoundtrips:
     @pytest.mark.parametrize("name", api.list_controllers())
     def test_controller_spec(self, name):
         spec = api.get_controller(name)
-        assert api.ControllerSpec.from_dict(
-            _json_roundtrip(spec.to_dict())) == spec
+        assert api.ControllerSpec.from_dict(_json_roundtrip(spec.to_dict())) == spec
 
     def test_experiment_spec_nested(self):
         exp = api.ExperimentSpec(
             pipeline=api.get_pipeline("serve2"),
             scenario=api.replace(api.get_scenario("ramp"), rate=40.0, seed=5),
-            controller=api.replace(api.get_controller("opd"),
-                                   train_episodes=2),
-            backend="analytic", seq_len=16)
+            controller=api.replace(api.get_controller("opd"), train_episodes=2),
+            backend="analytic",
+            seq_len=16,
+        )
         back = api.ExperimentSpec.from_dict(_json_roundtrip(exp.to_dict()))
         assert back == exp
 
@@ -59,10 +65,18 @@ class TestSpecRoundtrips:
 class TestRegistries:
     def test_builtins_registered(self):
         assert {"paper-4stage", "serve2", "serve3"} <= set(api.list_pipelines())
-        assert {"bursty", "poisson", "ramp", "trace", "steady_low",
-                "fluctuating", "steady_high"} <= set(api.list_scenarios())
+        assert {
+            "bursty",
+            "poisson",
+            "ramp",
+            "trace",
+            "steady_low",
+            "fluctuating",
+            "steady_high",
+        } <= set(api.list_scenarios())
         assert {"opd", "greedy", "ipa", "random", "expert"} <= set(
-            api.list_controllers())
+            api.list_controllers()
+        )
 
     def test_unknown_names_raise(self):
         with pytest.raises(KeyError):
@@ -77,14 +91,14 @@ class TestRegistries:
         perf model's default_pipeline hard-codes."""
         a, b = api.get_pipeline("paper-4stage").build(), default_pipeline()
         assert a.n_tasks == b.n_tasks
-        for ta, tb in zip(a.tasks, b.tasks):
-            assert tuple(v.name for v in ta.variants) == tuple(
-                v.name for v in tb.variants)
+        for ta, tb in zip(a.tasks, b.tasks, strict=True):
+            assert tuple((v.name for v in ta.variants)) == tuple(
+                (v.name for v in tb.variants)
+            )
         assert (a.f_max, a.b_max, a.w_max) == (b.f_max, b.b_max, b.w_max)
 
     def test_register_custom(self):
-        spec = api.PipelineSpec("tiny-test", (("xlstm-125m",),),
-                                quants=("bf16",))
+        spec = api.PipelineSpec("tiny-test", (("xlstm-125m",),), quants=("bf16",))
         api.register_pipeline(spec)
         assert api.get_pipeline("tiny-test") == spec
         pipe = spec.build()
@@ -97,12 +111,15 @@ class TestActionConfigInversion:
         pipe = api.get_pipeline(name).build()
         rng = np.random.default_rng(0)
         for _ in range(25):
-            a = np.array([rng.integers(0, s) for s in head_sizes(pipe)],
-                         dtype=np.int32)
+            a = np.array([rng.integers(0, s) for s in head_sizes(pipe)], dtype=np.int32)
             cfg = action_to_config(pipe, a)
             assert np.array_equal(config_to_action(pipe, cfg), a)
-            assert all(0 <= z < len(t.variants)
-                       for z, t in zip(cfg.z, pipe.tasks))
+            assert all(
+                (
+                    0 <= z < len(t.variants)
+                    for (z, t) in zip(cfg.z, pipe.tasks, strict=True)
+                )
+            )
             assert all(1 <= f <= pipe.f_max for f in cfg.f)
             assert all(1 <= b <= pipe.b_max for b in cfg.b)
 
@@ -141,9 +158,9 @@ class TestSession:
     def _exp(self, **kw):
         base = dict(
             pipeline=api.get_pipeline("serve2"),
-            scenario=api.replace(api.get_scenario("bursty"), horizon=30,
-                                 seed=3),
-            controller=api.get_controller("greedy"))
+            scenario=api.replace(api.get_scenario("bursty"), horizon=30, seed=3),
+            controller=api.get_controller("greedy"),
+        )
         base.update(kw)
         return api.ExperimentSpec(**base)
 
@@ -163,9 +180,10 @@ class TestSession:
     def test_analytic_backend_matches_run_episode(self):
         """Session's analytic loop reproduces the legacy run_episode path."""
         from repro.core import run_episode
-        exp = self._exp(scenario=api.replace(api.get_scenario("fluctuating"),
-                                             seed=9, horizon=300),
-                        backend="analytic")
+        exp = self._exp(
+            scenario=api.replace(api.get_scenario("fluctuating"), seed=9, horizon=300),
+            backend="analytic",
+        )
         rep = api.run_experiment(exp)
         pipe = exp.pipeline.build()
         env = PipelineEnv(pipe, exp.scenario.eval_trace(), seed=9)
@@ -185,8 +203,9 @@ class TestSession:
         json.dumps(rep)          # the whole report is a JSON-safe artifact
 
     def test_trainable_controller_requires_episodes(self):
-        exp = self._exp(controller=api.replace(api.get_controller("opd"),
-                                               train_episodes=0))
+        exp = self._exp(
+            controller=api.replace(api.get_controller("opd"), train_episodes=0)
+        )
         with pytest.raises(RuntimeError):
             api.Session.from_spec(exp).serve()
 
@@ -200,8 +219,7 @@ class TestOPDWarmup:
         from repro.core import OPDPolicy, init_policy
         pipe = api.get_pipeline("serve2").build()
         env = PipelineEnv(pipe, make_trace("steady_low", seed=0), seed=0)
-        params = init_policy(jax.random.PRNGKey(0), env.state_dim,
-                             head_sizes(pipe))
+        params = init_policy(jax.random.PRNGKey(0), env.state_dim, head_sizes(pipe))
         pol = OPDPolicy(pipe, params, greedy=False, seed=5)
         key0 = pol.key
         obs = env.observe()
@@ -210,7 +228,9 @@ class TestOPDWarmup:
         # two splits consumed: one thrown away by warmup, one for the
         # decision — the decision subkey differs from the warmup subkey
         _, warm = jax.random.split(key0)
-        k1, real = jax.random.split(jax.random.split(key0)[0])
+        # intentional reuse: re-derive both subkey chains from the same key0
+        k0a = jax.random.split(key0)[0]  # reprolint: ignore[RPL001]
+        k1, real = jax.random.split(k0a)
         assert not np.array_equal(np.asarray(warm), np.asarray(real))
         assert np.array_equal(np.asarray(pol.key), np.asarray(k1))
         pol.decide(obs)

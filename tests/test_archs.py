@@ -45,21 +45,27 @@ def test_forward_and_train_step(name, smoke_models):
     assert metrics["grad_norm"] > 0.0
     # params actually changed
     delta = jax.tree.reduce(
-        lambda a, b: a + b,
-        jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()), params, p2))
+        lambda a,
+        b: a + b,
+        jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()), params, p2),
+    )
     assert delta > 0.0
 
 
 @pytest.mark.parametrize("name", sorted(ARCHS))
 def test_decode_step(name, smoke_models):
-    cfg, params = smoke_models.get(name) or (ARCHS[name].smoke(),
-                                             api.init_model(KEY, ARCHS[name].smoke()))
+    cfg, params = smoke_models.get(name) or (
+        ARCHS[name].smoke(),
+        api.init_model(KEY, ARCHS[name].smoke()),
+    )
     serve = steps.make_serve_step(cfg, DECODE)
     ctx = steps.cache_context(cfg, DECODE)
     cache = api.init_cache(cfg, 2, max(ctx, 1))
     if cfg.family == "audio":
         from repro.models import whisper
-        batch = {"enc_states": jax.random.normal(KEY, (2, cfg.enc_len, cfg.d_model)) * 0.1}
+        batch = {
+            "enc_states": jax.random.normal(KEY, (2, cfg.enc_len, cfg.d_model)) * 0.1
+        }
         cache = whisper.prefill_cache(params, batch, cfg, max(ctx, 1))
     logits, cache2 = serve(params, {"tokens": jnp.ones((2, 1), jnp.int32)}, cache)
     assert logits.shape == (2, 1, cfg.vocab)
@@ -86,8 +92,14 @@ def test_full_config_matches_assignment(name):
         "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
     }[name]
     cfg = ARCHS[name]
-    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_ff,
-            cfg.vocab) == spec
+    assert (
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv,
+        cfg.d_ff,
+        cfg.vocab,
+    ) == spec
     if name == "granite-moe-3b-a800m":
         assert (cfg.n_experts, cfg.top_k) == (40, 8)
     if name == "llama4-maverick-400b-a17b":
@@ -110,8 +122,10 @@ def test_prefill_step_dense_returns_cache():
     # extend cache to give room for the new token
     import jax.numpy as jnp2
     pad = jnp2.zeros((cfg.n_layers, 2, 8, cfg.n_kv, cfg.head_dim), cache["k"].dtype)
-    cache = {"k": jnp2.concatenate([cache["k"], pad], axis=2),
-             "v": jnp2.concatenate([cache["v"], pad], axis=2),
-             "pos": cache["pos"]}
+    cache = {
+        "k": jnp2.concatenate([cache["k"], pad], axis=2),
+        "v": jnp2.concatenate([cache["v"], pad], axis=2),
+        "pos": cache["pos"],
+    }
     lg, c2 = serve(params, {"tokens": jnp.ones((2, 1), jnp.int32)}, cache)
     assert not jnp.isnan(lg).any()

@@ -25,10 +25,16 @@ class TestShardingSpecs:
         for kind in ("train", "decode"):
             psh = shd.param_shardings(cfg, mesh, kind=kind)
             shapes = jax.eval_shape(
-                lambda k: __import__("repro.models.api", fromlist=["api"])
-                .init_model(k, cfg), jax.random.PRNGKey(0))
-            for leaf, sh in zip(jax.tree.leaves(shapes), jax.tree.leaves(psh)):
-                for dim, ax in zip(leaf.shape, tuple(sh.spec) + (None,) * 9):
+                lambda k: __import__("repro.models.api", fromlist=["api"]).init_model(
+                    k,
+                    cfg,
+                ),
+                jax.random.PRNGKey(0),
+            )
+            for leaf, sh in zip(jax.tree.leaves(shapes), jax.tree.leaves(psh),
+                                strict=True):
+                for dim, ax in zip(leaf.shape, tuple(sh.spec) + (None,) * 9,
+                                   strict=False):
                     if ax is None:
                         continue
                     axes = (ax,) if isinstance(ax, str) else tuple(ax)
@@ -42,8 +48,9 @@ class TestShardingSpecs:
         mesh = abstract_mesh((16, 16), ("data", "model"))
         osh = shd.opt_shardings(cfg, mesh)
         specs = [s.spec for s in jax.tree.leaves(osh)]
-        assert any("data" in str(sp) for sp in specs), \
-            "ZeRO-1 should shard at least one moment leaf over data"
+        assert any(
+            ("data" in str(sp) for sp in specs)
+        ), "ZeRO-1 should shard at least one moment leaf over data"
 
 
 MOE_EP_SCRIPT = textwrap.dedent("""
@@ -51,7 +58,7 @@ MOE_EP_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from repro import nn
-    from repro.compat import use_mesh
+    from repro.compat import make_mesh, use_mesh
 
     key = jax.random.PRNGKey(0)
     p = nn.init_moe(key, 32, 64, 16)          # E=16 -> padded stays 16
@@ -59,7 +66,7 @@ MOE_EP_SCRIPT = textwrap.dedent("""
 
     y_local, aux_local = nn.moe(p, x, top_k=2)            # no mesh
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    mesh = make_mesh((2, 4), ("data", "model"))
     with use_mesh(mesh):
         y_ep, aux_ep = jax.jit(lambda p_, x_: nn.moe(p_, x_, top_k=2))(p, x)
 
@@ -75,7 +82,7 @@ DRYRUN_SMOKE_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.compat import cost_analysis, use_mesh
+    from repro.compat import cost_analysis, make_mesh, use_mesh
     from repro.configs import ARCHS
     from repro.distributed import sharding as shd
     from repro.models import api, steps
@@ -86,7 +93,7 @@ DRYRUN_SMOKE_SCRIPT = textwrap.dedent("""
     cfg = ARCHS["granite-moe-3b-a800m"].smoke().replace(
         n_experts=16, top_k=2, n_heads=4, n_kv=4)
     shape = InputShape("t", 64, 8, "train")
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    mesh = make_mesh((2, 4), ("data", "model"))
     bs = steps.batch_specs(cfg, shape)
     bsh = shd.batch_shardings(cfg, shape, mesh)
     psh = shd.param_shardings(cfg, mesh)
@@ -105,10 +112,13 @@ DRYRUN_SMOKE_SCRIPT = textwrap.dedent("""
 
 
 def _run_sub(script: str):
-    res = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                         text=True, timeout=420,
-                         env={**__import__("os").environ,
-                              "PYTHONPATH": "src"})
+    res = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        timeout=420,
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+    )
     assert res.returncode == 0, f"stdout:{res.stdout}\nstderr:{res.stderr[-2000:]}"
     return res.stdout
 

@@ -18,7 +18,7 @@ FA_SHAPES = [
     (1, 128, 4, 2, 64),
     (2, 256, 8, 8, 64),
     (1, 256, 6, 2, 128),
-    (2, 128, 4, 1, 80),    # non-128 head_dim (zamba2-style)
+    (2, 128, 4, 1, 80),  # non-128 head_dim (zamba2-style)
 ]
 
 
@@ -59,7 +59,7 @@ DEC_SHAPES = [
     (2, 8, 2, 64, 1024, 700),
     (1, 24, 8, 128, 2048, 2048),
     (4, 4, 4, 64, 512, 100),
-    (2, 32, 8, 128, 1024, 1),     # single valid slot
+    (2, 32, 8, 128, 1024, 1),  # single valid slot
 ]
 
 
@@ -94,8 +94,12 @@ def test_flash_matches_model_attention_path():
     must reproduce the jnp path."""
     from repro.configs import ARCHS
     from repro.models import api
-    cfg = ARCHS["llama3.2-1b"].smoke().replace(d_model=256, n_heads=4, n_kv=2,
-                                               n_layers=2)
+    cfg = ARCHS["llama3.2-1b"].smoke().replace(
+        d_model=256,
+        n_heads=4,
+        n_kv=2,
+        n_layers=2,
+    )
     cfg_f = cfg.replace(use_flash=True)
     p = api.init_model(KEY, cfg)
     batch = {"tokens": jnp.arange(2 * 128).reshape(2, 128) % cfg.vocab}

@@ -5,8 +5,16 @@ import pytest
 from _hyp import given, settings, st
 
 from repro.cluster import default_pipeline, make_trace, PipelineEnv
-from repro.core.mdp import (Config, QoSWeights, evaluate, feasible,
-                            pipeline_metrics, resource_usage, reward, qos)
+from repro.core.mdp import (
+    Config,
+    QoSWeights,
+    evaluate,
+    feasible,
+    pipeline_metrics,
+    resource_usage,
+    reward,
+    qos,
+)
 
 PIPE = default_pipeline()
 W = QoSWeights()
@@ -41,8 +49,9 @@ class TestMetrics:
     def test_reward_eq7_consistency(self, cfg, demand):
         """Eq.(7): r = Q - beta_c*C - gamma_b*max(b)."""
         m = evaluate(PIPE, cfg, demand, W)
-        assert abs(m["reward"] - (m["qos"] - W.beta_c * m["C"]
-                                  - W.gamma_b * max(cfg.b))) < 1e-9
+        assert abs(
+            m["reward"] - (m["qos"] - W.beta_c * m["C"] - W.gamma_b * max(cfg.b))
+        ) < 1e-09
         assert abs(reward(PIPE, cfg, demand, W) - m["reward"]) < 1e-9
         assert abs(qos(PIPE, cfg, demand, W) - m["qos"]) < 1e-9
 
@@ -50,8 +59,11 @@ class TestMetrics:
     @settings(max_examples=100, deadline=None)
     def test_more_replicas_never_reduce_capacity(self, cfg):
         m1 = evaluate(PIPE, cfg, 100.0, W)
-        bigger = Config(z=cfg.z, f=tuple(min(f + 1, PIPE.f_max) for f in cfg.f),
-                        b=cfg.b)
+        bigger = Config(
+            z=cfg.z,
+            f=tuple((min(f + 1, PIPE.f_max) for f in cfg.f)),
+            b=cfg.b,
+        )
         m2 = evaluate(PIPE, bigger, 100.0, W)
         assert m2["capacity"] >= m1["capacity"] - 1e-9
 
@@ -67,8 +79,12 @@ class TestMetrics:
     @settings(max_examples=100, deadline=None)
     def test_resource_usage_additive(self, cfg):
         total = resource_usage(PIPE, cfg)
-        parts = sum(PIPE.tasks[n].variants[cfg.z[n]].resource * cfg.f[n]
-                    for n in range(PIPE.n_tasks))
+        parts = sum(
+            (
+                PIPE.tasks[n].variants[cfg.z[n]].resource * cfg.f[n]
+                for n in range(PIPE.n_tasks)
+            )
+        )
         assert abs(total - parts) < 1e-9
         assert feasible(PIPE, cfg) == (total <= PIPE.w_max)
 

@@ -6,13 +6,31 @@ import numpy as np
 from _hyp import given, settings, st
 
 from repro.cluster import default_pipeline, make_trace, PipelineEnv
-from repro.core import (ExpertPolicy, GreedyPolicy, IPAPolicy, OPDPolicy,
-                        OPDTrainer, PPOConfig, RandomPolicy, action_to_config,
-                        compute_gae, config_to_action, head_sizes, init_policy,
-                        log_prob_entropy, run_episode, sample_action)
+from repro.core import (
+    ExpertPolicy,
+    GreedyPolicy,
+    IPAPolicy,
+    OPDPolicy,
+    OPDTrainer,
+    PPOConfig,
+    RandomPolicy,
+    action_to_config,
+    compute_gae,
+    config_to_action,
+    head_sizes,
+    init_policy,
+    log_prob_entropy,
+    run_episode,
+    sample_action,
+)
 from repro.core.mdp import feasible
-from repro.core.predictor import (HISTORY, init_predictor, smape,
-                                  train_predictor, as_predictor_fn)
+from repro.core.predictor import (
+    HISTORY,
+    init_predictor,
+    smape,
+    train_predictor,
+    as_predictor_fn,
+)
 
 PIPE = default_pipeline()
 
@@ -39,8 +57,7 @@ class TestPolicy:
     def test_action_config_roundtrip(self):
         rng = np.random.default_rng(0)
         for _ in range(20):
-            a = np.array([rng.integers(0, s) for s in head_sizes(PIPE)],
-                         dtype=np.int32)
+            a = np.array([rng.integers(0, s) for s in head_sizes(PIPE)], dtype=np.int32)
             cfg = action_to_config(PIPE, a)
             a2 = config_to_action(PIPE, cfg)
             assert np.array_equal(a, a2)
@@ -48,8 +65,7 @@ class TestPolicy:
 
     def test_sample_action_logprob_consistent(self):
         env = make_env()
-        params = init_policy(jax.random.PRNGKey(0), env.state_dim,
-                             head_sizes(PIPE))
+        params = init_policy(jax.random.PRNGKey(0), env.state_dim, head_sizes(PIPE))
         s = jnp.asarray(env.reset())
         a, logp, v = sample_action(params, s, jax.random.PRNGKey(1))
         lp, ent, vv = log_prob_entropy(params, s[None], np.asarray(a)[None])
@@ -108,8 +124,10 @@ class TestBaselines:
         from repro.cluster.perf_model import make_pipeline
         from repro.configs import ARCHS
         small = make_pipeline([[ARCHS["xlstm-125m"]]] * 2, quants=("bf16",))
-        big = make_pipeline([[ARCHS["xlstm-125m"]] ] * 4,
-                            quants=("bf16", "int8", "int4"))
+        big = make_pipeline(
+            [[ARCHS["xlstm-125m"]]] * 4,
+            quants=("bf16", "int8", "int4"),
+        )
         for pipe in (small, big):
             env = PipelineEnv(pipe, make_trace("steady_low", seed=0))
             env.reset()
@@ -127,15 +145,15 @@ class TestBaselines:
 
 class TestOPDTraining:
     def test_ppo_episode_updates_params_and_logs(self):
-        tr = OPDTrainer(PIPE, make_env, ppo=PPOConfig(epochs=1, expert_freq=2),
-                        seed=0)
+        tr = OPDTrainer(PIPE, make_env, ppo=PPOConfig(epochs=1, expert_freq=2), seed=0)
         before = jax.tree.map(jnp.copy, tr.params)
         tr.train_episode(1)
         tr.train_episode(2)     # expert episode (freq=2)
         delta = jax.tree.reduce(
-            lambda a, b: a + b,
-            jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()),
-                         before, tr.params))
+            lambda a,
+            b: a + b,
+            jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()), before, tr.params),
+        )
         assert delta > 0
         assert len(tr.history["reward"]) == 2
         assert tr.history["expert"] == [False, True]

@@ -7,14 +7,23 @@ from repro.cluster import ADAPTATION_INTERVAL, RuntimeEnv
 from repro.cluster.perf_model import make_pipeline
 from repro.configs import ARCHS
 from repro.core.mdp import Config
-from repro.serving import (BurstyArrivals, ContinuousBatcher, PoissonArrivals,
-                           RampArrivals, Request, ServingRuntime,
-                           TraceArrivals, percentile)
+from repro.serving import (
+    BurstyArrivals,
+    ContinuousBatcher,
+    PoissonArrivals,
+    RampArrivals,
+    Request,
+    ServingRuntime,
+    TraceArrivals,
+    percentile,
+)
 
 
 def two_stage_pipe():
-    return make_pipeline([[ARCHS["whisper-small"]], [ARCHS["llama3.2-1b"]]],
-                         quants=("bf16",))
+    return make_pipeline(
+        [[ARCHS["whisper-small"]], [ARCHS["llama3.2-1b"]]],
+        quants=("bf16",),
+    )
 
 
 def build_runtime(cfg=Config(z=(0, 0), f=(2, 2), b=(4, 4))):
@@ -74,8 +83,10 @@ class TestContinuousBatcher:
         """A lone request must not wait for a full batch: it dispatches at
         arrival + max_wait via the event loop's timer."""
         rt = ServingRuntime.from_pipeline(
-            two_stage_pipe(), cfg=Config(z=(0, 0), f=(1, 1), b=(8, 8)),
-            max_wait=0.2)
+            two_stage_pipe(),
+            cfg=Config(z=(0, 0), f=(1, 1), b=(8, 8)),
+            max_wait=0.2,
+        )
         rt.submit(Request(rid=0, tokens=np.arange(32, dtype=np.int32)), at=1.0)
         rt.drain()
         assert len(rt.completed) == 1
@@ -157,18 +168,21 @@ class TestClosedLoop:
 
     def test_variant_switch_pays_cold_start(self):
         pipe = two_stage_pipe()
-        rt = ServingRuntime.from_pipeline(pipe, cfg=Config(z=(0, 0), f=(1, 1),
-                                                           b=(1, 1)))
+        rt = ServingRuntime.from_pipeline(
+            pipe,
+            cfg=Config(z=(0, 0), f=(1, 1), b=(1, 1)),
+        )
         rt.submit(Request(rid=0, tokens=np.arange(32, dtype=np.int32)), at=0.0)
         rt.run_until(0.0)
         rt.apply_config(Config(z=(0, 0), f=(1, 1), b=(1, 1)))
         assert rt.switch_count == 0              # same variant: free
         # no alternative variants in this pipe; simulate a switch by forcing
         # a 2-variant stage instead
-        pipe2 = make_pipeline([[ARCHS["whisper-small"], ARCHS["xlstm-125m"]]],
-                              quants=("bf16",))
-        rt2 = ServingRuntime.from_pipeline(pipe2, cfg=Config(z=(0,), f=(1,),
-                                                             b=(8,)))
+        pipe2 = make_pipeline(
+            [[ARCHS["whisper-small"], ARCHS["xlstm-125m"]]],
+            quants=("bf16",),
+        )
+        rt2 = ServingRuntime.from_pipeline(pipe2, cfg=Config(z=(0,), f=(1,), b=(8,)))
         rt2.submit(Request(rid=0, tokens=np.arange(32, dtype=np.int32)), at=0.0)
         rt2.run_until(0.0)       # request queued, waiting to fill the batch
         rt2.apply_config(Config(z=(1,), f=(1,), b=(8,)))
@@ -185,10 +199,15 @@ class TestClosedLoop:
         already-heaped partial-batch timeout is superseded — the batch
         dispatches at the *new* cold-start gate, and the stale timer is
         counted as dropped instead of poking the reconfigured stage."""
-        pipe2 = make_pipeline([[ARCHS["whisper-small"], ARCHS["xlstm-125m"]]],
-                              quants=("bf16",))
+        pipe2 = make_pipeline(
+            [[ARCHS["whisper-small"], ARCHS["xlstm-125m"]]],
+            quants=("bf16",),
+        )
         rt = ServingRuntime.from_pipeline(
-            pipe2, cfg=Config(z=(0,), f=(1,), b=(8,)), max_wait=0.2)
+            pipe2,
+            cfg=Config(z=(0,), f=(1,), b=(8,)),
+            max_wait=0.2,
+        )
         rt.submit(Request(rid=0, tokens=np.arange(32, dtype=np.int32)), at=0.0)
         rt.run_until(0.0)        # arrival poked: timeout timer armed at 0.2
         assert rt.stages[0]._pending_timer == pytest.approx(0.2)
@@ -224,15 +243,18 @@ class TestClosedLoop:
         finite, telemetry percentiles appear in info, and reconfiguration
         mid-run loses no requests."""
         pipe = make_pipeline(
-            [[ARCHS["whisper-small"], ARCHS["xlstm-125m"]],
-             [ARCHS["llama3.2-1b"]]], quants=("bf16",))
+            [[ARCHS["whisper-small"], ARCHS["xlstm-125m"]], [ARCHS["llama3.2-1b"]]],
+            quants=("bf16",),
+        )
         env = RuntimeEnv(pipe, PoissonArrivals(15, seed=4), horizon=40)
         obs = env.reset()
         assert obs.shape == (pipe.n_tasks * 9,)
-        cfgs = [Config(z=(0, 0), f=(2, 2), b=(4, 4)),
-                Config(z=(1, 0), f=(2, 2), b=(4, 4)),   # variant switch
-                Config(z=(1, 0), f=(3, 3), b=(8, 8)),
-                Config(z=(0, 0), f=(2, 2), b=(4, 4))]   # switch back
+        cfgs = [
+            Config(z=(0, 0), f=(2, 2), b=(4, 4)),
+            Config(z=(1, 0), f=(2, 2), b=(4, 4)),  # variant switch
+            Config(z=(1, 0), f=(3, 3), b=(8, 8)),
+            Config(z=(0, 0), f=(2, 2), b=(4, 4)),  # switch back
+        ]
         total_steps = 0
         for cfg in cfgs:
             obs, r, done, info = env.step(cfg)

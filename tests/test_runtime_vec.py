@@ -14,8 +14,7 @@ from _hyp import given, settings, st
 
 from repro import api
 from repro.cluster import RuntimeEnv
-from repro.core import OPDTrainer, PPOConfig, action_to_config, head_sizes, \
-    init_policy
+from repro.core import OPDTrainer, PPOConfig, action_to_config, head_sizes, init_policy
 from repro.core import runtime_vec as rv
 from repro.core import vecenv
 from repro.core.mdp import QoSWeights
@@ -28,8 +27,9 @@ N_STEPS = HORIZON // 10
 
 def _random_actions(pipe, rng, n):
     sizes = head_sizes(pipe)
-    return np.stack([[rng.integers(0, s) for s in sizes]
-                     for _ in range(n)]).astype(np.int32)
+    return np.stack([[rng.integers(0, s) for s in sizes] for _ in range(n)]).astype(
+        np.int32
+    )
 
 
 def _reference_episode(pipe, arrivals, actions):
@@ -56,8 +56,13 @@ class TestTwinEquivalence:
 
         ref_r, ref_c = _reference_episode(pipe, arrivals, actions)
         ep = rv.episode_arrivals(arrivals, HORIZON)
-        out = rv.replay(tables, ep, jnp.asarray(actions), n_steps=N_STEPS,
-                        weights=WEIGHTS)
+        out = rv.replay(
+            tables,
+            ep,
+            jnp.asarray(actions),
+            n_steps=N_STEPS,
+            weights=WEIGHTS,
+        )
         twin_c = np.asarray(out["completed"], np.int64)
         twin_r = np.asarray(out["rewards"])
 
@@ -76,8 +81,13 @@ class TestTwinEquivalence:
         actions = _random_actions(pipe, np.random.default_rng(5), N_STEPS)
         ref_r, ref_c = _reference_episode(pipe, arrivals, actions)
         ep = rv.episode_arrivals(arrivals, HORIZON)
-        out = rv.replay(tables, ep, jnp.asarray(actions), n_steps=N_STEPS,
-                        weights=WEIGHTS)
+        out = rv.replay(
+            tables,
+            ep,
+            jnp.asarray(actions),
+            n_steps=N_STEPS,
+            weights=WEIGHTS,
+        )
         assert np.allclose(np.asarray(out["rewards"]), ref_r, atol=0.15)
         assert int(np.asarray(out["completed"]).sum()) > 0
 
@@ -107,13 +117,14 @@ class TestEpisodeArrivals:
             rv.episode_arrivals(arr, HORIZON, n_cap=rv._ARRIVAL_PAD)
 
     def test_stack_pads_to_widest(self):
-        eps = [rv.episode_arrivals(make_arrivals("poisson", rate=r, seed=r),
-                                   HORIZON) for r in (5, 40)]
+        eps = [
+            rv.episode_arrivals(make_arrivals("poisson", rate=r, seed=r), HORIZON)
+            for r in (5, 40)
+        ]
         batch = rv.stack_episodes(eps)
         assert batch.times.shape[0] == 2
         assert batch.times.shape[1] == max(e.times.shape[0] for e in eps)
-        assert np.all(np.isinf(np.asarray(batch.times[0])[
-            eps[0].times.shape[0]:]))
+        assert np.all(np.isinf(np.asarray(batch.times[0])[eps[0].times.shape[0]:]))
 
 
 class TestVecRollout:
@@ -122,23 +133,34 @@ class TestVecRollout:
     def _setup(self, name="serve2"):
         pipe = api.get_pipeline(name).build()
         tables = vecenv.tables_from_pipeline(pipe)
-        env = RuntimeEnv(pipe, make_arrivals("bursty", rate=20, seed=0),
-                         horizon=HORIZON)
-        params = init_policy(jax.random.PRNGKey(0), env.state_dim,
-                             head_sizes(pipe))
-        eps = rv.stack_episodes([
-            rv.episode_arrivals(make_arrivals("bursty", rate=20, seed=i),
-                                HORIZON) for i in range(self.B)])
-        keys = jax.vmap(lambda s: jax.random.fold_in(jax.random.PRNGKey(9),
-                                                     s))(jnp.arange(self.B))
+        env = RuntimeEnv(
+            pipe,
+            make_arrivals("bursty", rate=20, seed=0),
+            horizon=HORIZON,
+        )
+        params = init_policy(jax.random.PRNGKey(0), env.state_dim, head_sizes(pipe))
+        eps = rv.stack_episodes(
+            [
+                rv.episode_arrivals(make_arrivals("bursty", rate=20, seed=i), HORIZON)
+                for i in range(self.B)
+            ]
+        )
+        keys = jax.vmap(lambda s: jax.random.fold_in(jax.random.PRNGKey(9), s))(
+            jnp.arange(self.B)
+        )
         return pipe, tables, params, eps, keys
 
     def test_shapes_and_finiteness(self):
         pipe, tables, params, eps, keys = self._setup()
-        out = rv.vec_rollout(params, tables, eps, keys, n_steps=N_STEPS,
-                             weights=WEIGHTS)
-        assert out["actions"].shape == (self.B, N_STEPS,
-                                        len(head_sizes(pipe)))
+        out = rv.vec_rollout(
+            params,
+            tables,
+            eps,
+            keys,
+            n_steps=N_STEPS,
+            weights=WEIGHTS,
+        )
+        assert out["actions"].shape == (self.B, N_STEPS, len(head_sizes(pipe)))
         assert out["last_value"].shape == (self.B,)
         for k in ("rewards", "values", "logps", "qos", "completed"):
             assert out[k].shape == (self.B, N_STEPS)
@@ -150,27 +172,46 @@ class TestVecRollout:
         """Each env consumes only its own (arrivals, key): permuting the
         env axis of the inputs permutes every output exactly."""
         _, tables, params, eps, keys = self._setup()
-        out = rv.vec_rollout(params, tables, eps, keys, n_steps=N_STEPS,
-                             weights=WEIGHTS)
+        out = rv.vec_rollout(
+            params,
+            tables,
+            eps,
+            keys,
+            n_steps=N_STEPS,
+            weights=WEIGHTS,
+        )
         perm = np.random.default_rng(perm_seed).permutation(self.B)
         eps_p = jax.tree.map(lambda x: x[perm], eps)
-        out_p = rv.vec_rollout(params, tables, eps_p, keys[perm],
-                               n_steps=N_STEPS, weights=WEIGHTS)
+        out_p = rv.vec_rollout(
+            params,
+            tables,
+            eps_p,
+            keys[perm],
+            n_steps=N_STEPS,
+            weights=WEIGHTS,
+        )
         for k in out:
-            assert np.array_equal(np.asarray(out[k])[perm],
-                                  np.asarray(out_p[k])), k
+            assert np.array_equal(np.asarray(out[k])[perm], np.asarray(out_p[k])), k
 
     def test_rollout_actions_replay_to_same_rewards(self):
         """A vec_rollout trajectory is a real runtime episode: feeding its
         action sequence back through the reference RuntimeEnv yields the
         same rewards."""
         pipe, tables, params, eps, keys = self._setup()
-        out = rv.vec_rollout(params, tables, eps, keys, n_steps=N_STEPS,
-                             weights=WEIGHTS)
+        out = rv.vec_rollout(
+            params,
+            tables,
+            eps,
+            keys,
+            n_steps=N_STEPS,
+            weights=WEIGHTS,
+        )
         i = 0
         ref_r, _ = _reference_episode(
-            pipe, make_arrivals("bursty", rate=20, seed=i),
-            np.asarray(out["actions"][i]))
+            pipe,
+            make_arrivals("bursty", rate=20, seed=i),
+            np.asarray(out["actions"][i]),
+        )
         assert np.allclose(np.asarray(out["rewards"][i]), ref_r, atol=0.15)
 
 
@@ -186,26 +227,37 @@ class TestTrainerVecRuntime:
     def test_vec_runtime_branch_updates_params(self):
         pipe = api.get_pipeline("serve2").build()
         make_env, arrivals = self._factory(pipe)
-        tr = OPDTrainer(pipe, make_env,
-                        ppo=PPOConfig(epochs=1, expert_freq=2), seed=0,
-                        num_envs=4, vec_runtime=arrivals)
+        tr = OPDTrainer(
+            pipe,
+            make_env,
+            ppo=PPOConfig(epochs=1, expert_freq=2),
+            seed=0,
+            num_envs=4,
+            vec_runtime=arrivals,
+        )
         assert tr._vec_runtime is not None
         before = jax.tree.map(jnp.copy, tr.params)
         tr.train_episode(1)                     # 1 % 2 != 0 -> runtime twin
         assert tr.history["expert"] == [False]
         delta = jax.tree.reduce(
-            lambda a, b: a + b,
-            jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()),
-                         before, tr.params))
+            lambda a,
+            b: a + b,
+            jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()), before, tr.params),
+        )
         assert delta > 0
         assert np.isfinite(tr.history["loss"]).all()
 
     def test_expert_episode_steps_real_runtime(self):
         pipe = api.get_pipeline("serve2").build()
         make_env, arrivals = self._factory(pipe)
-        tr = OPDTrainer(pipe, make_env,
-                        ppo=PPOConfig(epochs=1, expert_freq=1), seed=0,
-                        num_envs=4, vec_runtime=arrivals)
+        tr = OPDTrainer(
+            pipe,
+            make_env,
+            ppo=PPOConfig(epochs=1, expert_freq=1),
+            seed=0,
+            num_envs=4,
+            vec_runtime=arrivals,
+        )
         tr.train_episode(1)                     # expert -> legacy RuntimeEnv
         assert tr.history["expert"] == [True]
         assert len(tr.expert_states) > 0
@@ -227,10 +279,14 @@ class TestClosedLoopAcceptance:
             return RuntimeEnv(pipe, arrivals(seed), horizon=HORIZON)
 
         def train(vec):
-            tr = OPDTrainer(pipe, make_env,
-                            ppo=PPOConfig(epochs=2, expert_freq=2), seed=0,
-                            num_envs=4 if vec else 1,
-                            vec_runtime=arrivals if vec else None)
+            tr = OPDTrainer(
+                pipe,
+                make_env,
+                ppo=PPOConfig(epochs=2, expert_freq=2),
+                seed=0,
+                num_envs=4 if vec else 1,
+                vec_runtime=arrivals if vec else None,
+            )
             tr.train(4)
             return tr.params
 
@@ -254,25 +310,32 @@ class TestSessionRuntimeBackend:
     def _spec(self):
         return api.ExperimentSpec(
             pipeline=api.get_pipeline("serve2"),
-            scenario=api.replace(api.get_scenario("bursty"), rate=20.0,
-                                 seed=4, horizon=HORIZON),
-            controller=api.replace(api.get_controller("opd"),
-                                   train_episodes=2, num_envs=2,
-                                   train_backend="runtime"),
-            backend="runtime")
+            scenario=api.replace(
+                api.get_scenario("bursty"),
+                rate=20.0,
+                seed=4,
+                horizon=HORIZON,
+            ),
+            controller=api.replace(
+                api.get_controller("opd"),
+                train_episodes=2,
+                num_envs=2,
+                train_backend="runtime",
+            ),
+            backend="runtime",
+        )
 
     def test_train_backend_roundtrips_through_json(self):
         spec = self._spec()
-        back = api.ExperimentSpec.from_dict(
-            json.loads(json.dumps(spec.to_dict())))
+        back = api.ExperimentSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
         assert back == spec
         assert back.controller.train_backend == "runtime"
 
     def test_unknown_train_backend_rejected(self):
         spec = api.replace(
             self._spec(),
-            controller=api.replace(self._spec().controller,
-                                   train_backend="quantum"))
+            controller=api.replace(self._spec().controller, train_backend="quantum"),
+        )
         with pytest.raises(ValueError, match="train_backend"):
             api.Session.from_spec(spec.to_dict()).train()
 

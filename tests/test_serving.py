@@ -11,10 +11,16 @@ from repro.serving import PipelineServer, StageServer
 @pytest.fixture(scope="module")
 def server():
     stages = [
-        StageServer("s0", [ARCHS["xlstm-125m"].smoke(),
-                           ARCHS["whisper-small"].smoke()], seed=0),
-        StageServer("s1", [ARCHS["llama3.2-1b"].smoke(),
-                           ARCHS["granite-moe-3b-a800m"].smoke()], seed=1),
+        StageServer(
+            "s0",
+            [ARCHS["xlstm-125m"].smoke(), ARCHS["whisper-small"].smoke()],
+            seed=0,
+        ),
+        StageServer(
+            "s1",
+            [ARCHS["llama3.2-1b"].smoke(), ARCHS["granite-moe-3b-a800m"].smoke()],
+            seed=1,
+        ),
     ]
     return PipelineServer(stages)
 

@@ -6,22 +6,31 @@ import pytest
 
 from repro.cluster import PipelineEnv, make_pipeline, make_trace
 from repro.configs import ARCHS
-from repro.core import (IPAPolicy, OPDPolicy, OPDTrainer,
-                        PPOConfig, RandomPolicy, run_episode)
+from repro.core import (
+    IPAPolicy,
+    OPDPolicy,
+    OPDTrainer,
+    PPOConfig,
+    RandomPolicy,
+    run_episode,
+)
 
 
 @pytest.fixture(scope="module")
 def small_setup():
     pipe = make_pipeline(
-        [[ARCHS["xlstm-125m"], ARCHS["llama3.2-1b"]],
-         [ARCHS["granite-moe-3b-a800m"], ARCHS["starcoder2-3b"]]],
-        name="e2e-2stage", w_max=32.0)
+        [
+            [ARCHS["xlstm-125m"], ARCHS["llama3.2-1b"]],
+            [ARCHS["granite-moe-3b-a800m"], ARCHS["starcoder2-3b"]],
+        ],
+        name="e2e-2stage",
+        w_max=32.0,
+    )
 
     def make_env(seed=0, kind="fluctuating"):
         return PipelineEnv(pipe, make_trace(kind, seed=seed), seed=seed)
 
-    trainer = OPDTrainer(pipe, make_env,
-                         ppo=PPOConfig(epochs=2, expert_freq=2), seed=0)
+    trainer = OPDTrainer(pipe, make_env, ppo=PPOConfig(epochs=2, expert_freq=2), seed=0)
     trainer.train(6)
     return pipe, make_env, trainer
 
@@ -29,7 +38,7 @@ def small_setup():
 def test_training_converges_upward(small_setup):
     _, _, trainer = small_setup
     h = trainer.history
-    agent_rewards = [r for r, e in zip(h["reward"], h["expert"]) if not e]
+    agent_rewards = [r for r, e in zip(h["reward"], h["expert"], strict=True) if not e]
     # by episode 6 the agent should not be worse than its own first episode
     assert agent_rewards[-1] >= agent_rewards[0] - 1.0
 
@@ -46,7 +55,9 @@ def test_opd_decision_faster_than_solver(small_setup):
     complex pipelines."""
     big = make_pipeline(
         [[ARCHS["xlstm-125m"], ARCHS["llama3.2-1b"], ARCHS["starcoder2-3b"]]] * 4,
-        name="big", w_max=64.0)
+        name="big",
+        w_max=64.0,
+    )
     env = PipelineEnv(big, make_trace("steady_low", seed=0))
     env.reset()
     ipa = IPAPolicy(big)

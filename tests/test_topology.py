@@ -12,28 +12,62 @@ import numpy as np
 import pytest
 
 from repro import api
-from repro.cluster import (ClusterTopology, Node, PipelineEnv, RuntimeEnv,
-                           make_trace)
+from repro.cluster import ClusterTopology, Node, PipelineEnv, RuntimeEnv, make_trace
 from repro.cluster.topology import PlacementCursor
 from repro.core import action_to_config, head_sizes
-from repro.core.mdp import (Config, ModelVariant, Pipeline, Task, evaluate,
-                            feasible, placement_for, resources_feasible,
-                            QoSWeights)
+from repro.core.mdp import (
+    Config,
+    ModelVariant,
+    Pipeline,
+    Task,
+    evaluate,
+    feasible,
+    placement_for,
+    resources_feasible,
+    QoSWeights,
+)
 from repro.serving.arrivals import PoissonArrivals
 
 # Pre-refactor PipelineEnv rewards (commit e8358b0): fixed action sequence
 # (rng seed 42, one draw per policy head) on make_trace("fluctuating",
 # seed=12, seconds=100). The homogeneous scalar pool must stay bit-for-bit.
 PINNED_PIPELINE_REWARDS = {
-    "paper-4stage": [-5.3151365468, -4.0462201494, -6.5935040844,
-                     -10.1241661778, 0.7804440702, -3.88291622, 0.7893590799,
-                     -1.145420371, -11.2171764889, -12.052861488],
-    "serve2": [1.8797802572, 3.9428146323, -7.6178342665, 6.6290005852,
-               -3.014205002, -5.0013625613, -1.184573621, 5.500170073,
-               -0.5607011719, 7.2181643876],
-    "serve3": [-4.187239754, -8.3480971311, -2.2778298527, -6.8513507324,
-               -9.5763173432, -6.1445828676, -2.3986653618, -8.6811828327,
-               -3.1954082609, -6.3897825176],
+    "paper-4stage": [
+        -5.3151365468,
+        -4.0462201494,
+        -6.5935040844,
+        -10.1241661778,
+        0.7804440702,
+        -3.88291622,
+        0.7893590799,
+        -1.145420371,
+        -11.2171764889,
+        -12.052861488,
+    ],
+    "serve2": [
+        1.8797802572,
+        3.9428146323,
+        -7.6178342665,
+        6.6290005852,
+        -3.014205002,
+        -5.0013625613,
+        -1.184573621,
+        5.500170073,
+        -0.5607011719,
+        7.2181643876,
+    ],
+    "serve3": [
+        -4.187239754,
+        -8.3480971311,
+        -2.2778298527,
+        -6.8513507324,
+        -9.5763173432,
+        -6.1445828676,
+        -2.3986653618,
+        -8.6811828327,
+        -3.1954082609,
+        -6.3897825176,
+    ],
 }
 
 # Pinned RuntimeEnv rewards: serve3 pipeline, PoissonArrivals(18, seed=7),
@@ -41,14 +75,22 @@ PINNED_PIPELINE_REWARDS = {
 # topology after the stale-timer fix (superseded batch-deadline timers are
 # dropped instead of poking the reconfigured stage), which changed the
 # event stream relative to the pre-topology-refactor pins.
-RUNTIME_CFGS = [Config(z=(0, 0, 0), f=(2, 2, 2), b=(4, 4, 4)),
-                Config(z=(1, 0, 1), f=(2, 2, 2), b=(4, 4, 4)),
-                Config(z=(1, 0, 1), f=(3, 3, 3), b=(8, 8, 8)),
-                Config(z=(0, 0, 0), f=(2, 2, 2), b=(4, 4, 4)),
-                Config(z=(0, 0, 0), f=(2, 2, 2), b=(4, 4, 4)),
-                Config(z=(0, 1, 0), f=(1, 1, 1), b=(2, 2, 2))]
-PINNED_RUNTIME_REWARDS = [6.9580128565, 3.0665564604, 6.5002657003,
-                          3.3109907280, 1.8467421393, -3.0921084267]
+RUNTIME_CFGS = [
+    Config(z=(0, 0, 0), f=(2, 2, 2), b=(4, 4, 4)),
+    Config(z=(1, 0, 1), f=(2, 2, 2), b=(4, 4, 4)),
+    Config(z=(1, 0, 1), f=(3, 3, 3), b=(8, 8, 8)),
+    Config(z=(0, 0, 0), f=(2, 2, 2), b=(4, 4, 4)),
+    Config(z=(0, 0, 0), f=(2, 2, 2), b=(4, 4, 4)),
+    Config(z=(0, 1, 0), f=(1, 1, 1), b=(2, 2, 2)),
+]
+PINNED_RUNTIME_REWARDS = [
+    6.9580128565,
+    3.0665564604,
+    6.5002657003,
+    3.310990728,
+    1.8467421393,
+    -3.0921084267,
+]
 
 
 def hetero_topo():
@@ -57,10 +99,22 @@ def hetero_topo():
 
 def tiny_pipe(resource=2.0, topo=None):
     """One-stage pipeline with a single variant of known resource size."""
-    var = ModelVariant(name="v", accuracy=0.8, cost=resource,
-                       resource=resource, alpha=0.02, beta=0.002)
-    return Pipeline(name="tiny", tasks=(Task("t0", (var,)),), f_max=8,
-                    b_max=8, w_max=6.0, topology=topo)
+    var = ModelVariant(
+        name="v",
+        accuracy=0.8,
+        cost=resource,
+        resource=resource,
+        alpha=0.02,
+        beta=0.002,
+    )
+    return Pipeline(
+        name="tiny",
+        tasks=(Task("t0", (var,)),),
+        f_max=8,
+        b_max=8,
+        w_max=6.0,
+        topology=topo,
+    )
 
 
 class TestScheduler:
@@ -70,8 +124,7 @@ class TestScheduler:
         topo = hetero_topo()
         a = topo.place((2.0, 4.0, 8.0), (3, 2, 4))
         b = topo.place((2.0, 4.0, 8.0), (3, 2, 4))
-        c = api.get_cluster("edge-hetero-3").build().place(
-            (2.0, 4.0, 8.0), (3, 2, 4))
+        c = api.get_cluster("edge-hetero-3").build().place((2.0, 4.0, 8.0), (3, 2, 4))
         assert a == b == c
 
     def test_first_fit_fills_nodes_in_order(self):
@@ -90,9 +143,11 @@ class TestScheduler:
         assert sum(pl.node_usage) < 6.0
 
     def test_hops_and_speeds(self):
-        topo = ClusterTopology("t", (Node("a", 4.0, speed=2.0),
-                                     Node("b", 8.0, speed=0.5)),
-                               hop_latency=0.1)
+        topo = ClusterTopology(
+            "t",
+            (Node("a", 4.0, speed=2.0), Node("b", 8.0, speed=0.5)),
+            hop_latency=0.1,
+        )
         pl = topo.place((4.0, 4.0), (1, 2))
         assert pl.nodes == ((0,), (1, 1))    # stage1 no longer fits on a
         assert pl.primary == (0, 1) and pl.n_hops == 1
@@ -121,8 +176,7 @@ class TestScheduler:
         assert not cur.can_place(1.0, 1)
 
     def test_cursor_respects_per_node_fragmentation(self):
-        cur = PlacementCursor(ClusterTopology(
-            "t", (Node("a", 3.0), Node("b", 3.0))))
+        cur = PlacementCursor(ClusterTopology("t", (Node("a", 3.0), Node("b", 3.0))))
         assert not cur.can_place(2.0, 3)     # 6 <= 6 total, but fragmented
         assert cur.can_place(2.0, 2)
 
@@ -135,8 +189,9 @@ class TestSpecs:
         assert back.build() == spec.build()
 
     def test_builtin_clusters_registered(self):
-        assert {"homogeneous", "edge-hetero-3",
-                "edge-constrained"} <= set(api.list_clusters())
+        assert {"homogeneous", "edge-hetero-3", "edge-constrained"} <= set(
+            api.list_clusters()
+        )
         with pytest.raises(KeyError):
             api.get_cluster("no-such-cluster")
 
@@ -146,8 +201,7 @@ class TestSpecs:
 
     def test_pipeline_spec_with_cluster_roundtrips(self):
         spec = api.get_pipeline("serve3-hetero")
-        back = api.PipelineSpec.from_dict(
-            json.loads(json.dumps(spec.to_dict())))
+        back = api.PipelineSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
         assert back == spec
         pipe = back.build()
         assert pipe.topology is not None and pipe.topo.n_nodes == 3
@@ -165,20 +219,18 @@ class TestHomogeneousEquivalence:
         """Acceptance: on the default homogeneous topology, PipelineEnv
         rewards are identical to the pinned pre-refactor values."""
         pipe = api.get_pipeline(name).build()
-        env = PipelineEnv(pipe, make_trace("fluctuating", seed=12,
-                                           seconds=100), seed=0)
+        env = PipelineEnv(pipe, make_trace("fluctuating", seed=12, seconds=100), seed=0)
         env.reset()
         rng = np.random.default_rng(42)
         for t, pinned in enumerate(PINNED_PIPELINE_REWARDS[name]):
-            a = np.array([rng.integers(0, s) for s in head_sizes(pipe)],
-                         np.int64)
+            a = np.array([rng.integers(0, s) for s in head_sizes(pipe)], np.int64)
             _, r, _, _ = env.step(action_to_config(pipe, a))
             assert r == pytest.approx(pinned, abs=1e-9), (name, t)
 
     def test_runtime_env_rewards_bit_for_bit(self):
         pipe = api.get_pipeline("serve3").build()
         env = RuntimeEnv(pipe, PoissonArrivals(18, seed=7), horizon=60)
-        for cfg, pinned in zip(RUNTIME_CFGS, PINNED_RUNTIME_REWARDS):
+        for cfg, pinned in zip(RUNTIME_CFGS, PINNED_RUNTIME_REWARDS, strict=True):
             _, r, _, info = env.step(cfg)
             assert float(r) == pytest.approx(pinned, abs=1e-9)
             assert info["migrations"] == 0    # single node: nothing moves
@@ -187,14 +239,20 @@ class TestHomogeneousEquivalence:
         """Pipeline(topology=homogeneous(w_max)) == Pipeline(topology=None)
         reward-for-reward."""
         base = api.get_pipeline("serve2").build()
-        explicit = Pipeline(name=base.name, tasks=base.tasks,
-                            f_max=base.f_max, b_max=base.b_max,
-                            w_max=base.w_max,
-                            topology=ClusterTopology.homogeneous(base.w_max))
+        explicit = Pipeline(
+            name=base.name,
+            tasks=base.tasks,
+            f_max=base.f_max,
+            b_max=base.b_max,
+            w_max=base.w_max,
+            topology=ClusterTopology.homogeneous(base.w_max),
+        )
         trace = make_trace("fluctuating", seed=5, seconds=80)
         rng = np.random.default_rng(7)
-        actions = [np.array([rng.integers(0, s) for s in head_sizes(base)],
-                            np.int64) for _ in range(8)]
+        actions = [
+            np.array([rng.integers(0, s) for s in head_sizes(base)], np.int64)
+            for _ in range(8)
+        ]
         for pipe_a, pipe_b in ((base, explicit),):
             ea = PipelineEnv(pipe_a, trace, seed=0)
             eb = PipelineEnv(pipe_b, trace, seed=0)
@@ -231,8 +289,7 @@ class TestPerNodeInfeasibility:
         _, r_ok, _, info_ok = env.step(ok)
         assert info_bad["infeasible"] and not info_ok["infeasible"]
         w = QoSWeights()
-        m = evaluate(pipe, bad, float(np.mean(trace[:10])), w,
-                     cold_frac=0.0)
+        m = evaluate(pipe, bad, float(np.mean(trace[:10])), w, cold_frac=0.0)
         assert r_bad == pytest.approx(m["reward"] - 50.0)
 
     def test_runtime_env_charges_penalty(self):
@@ -253,17 +310,15 @@ class TestVecenvPlacement:
         pipe = api.get_pipeline("serve3-hetero").build()
         tables = vecenv.tables_from_pipeline(pipe)
         assert tables.n_nodes == 3
-        trace = jnp.asarray(make_trace("fluctuating", seed=2, seconds=60),
-                            jnp.float32)
+        trace = jnp.asarray(make_trace("fluctuating", seed=2, seconds=60), jnp.float32)
         state = vecenv.init_state(tables)
         rng = np.random.default_rng(3)
-        a = jnp.asarray([rng.integers(0, s) for s in head_sizes(pipe)],
-                        jnp.int32)
+        a = jnp.asarray([rng.integers(0, s) for s in head_sizes(pipe)], jnp.int32)
         B = 5
         batch_state = jax.tree.map(lambda x: jnp.stack([x] * B), state)
-        out = jax.vmap(
-            lambda s: vecenv.step(tables, s, a, trace, QoSWeights()))(
-                batch_state)
+        out = jax.vmap(lambda s: vecenv.step(tables, s, a, trace, QoSWeights()))(
+            batch_state
+        )
         _, obs, rewards, metrics = out
         assert np.unique(np.asarray(rewards)).size == 1
         assert np.all(np.asarray(obs) == np.asarray(obs)[0])
@@ -278,18 +333,24 @@ class TestVecenvPlacement:
         tables = vecenv.tables_from_pipeline(pipe)
         rng = np.random.default_rng(11)
         for _ in range(25):
-            z = tuple(int(rng.integers(0, len(t.variants)))
-                      for t in pipe.tasks)
-            f = tuple(int(rng.integers(1, pipe.f_max + 1))
-                      for _ in pipe.tasks)
-            pl = placement_for(pipe, Config(z=z, f=f,
-                                            b=(1,) * pipe.n_tasks))
+            z = tuple((int(rng.integers(0, len(t.variants))) for t in pipe.tasks))
+            f = tuple((int(rng.integers(1, pipe.f_max + 1)) for _ in pipe.tasks))
+            pl = placement_for(pipe, Config(z=z, f=f, b=(1,) * pipe.n_tasks))
             twin = vecenv._placement(
-                tables, jnp.asarray(z, jnp.int32), jnp.asarray(f, jnp.int32))
-            assert np.allclose(np.asarray(twin.speed_sum),
-                               pl.stage_speed_sum, atol=1e-5)
-            assert np.allclose(np.asarray(twin.min_speed),
-                               pl.stage_min_speed, atol=1e-6)
+                tables,
+                jnp.asarray(z, jnp.int32),
+                jnp.asarray(f, jnp.int32),
+            )
+            assert np.allclose(
+                np.asarray(twin.speed_sum),
+                pl.stage_speed_sum,
+                atol=1e-05,
+            )
+            assert np.allclose(
+                np.asarray(twin.min_speed),
+                pl.stage_min_speed,
+                atol=1e-06,
+            )
             assert tuple(np.asarray(twin.primary)) == pl.primary
             assert (float(twin.overflow) > 0) == (pl.overflow > 0)
             # per-slot speeds follow the placement assignment order
@@ -298,7 +359,9 @@ class TestVecenvPlacement:
                     for r, node in enumerate(nodes):
                         assert np.isclose(
                             float(twin.slot_speed[i, r]),
-                            pipe.topo.nodes[node].speed, atol=1e-6)
+                            pipe.topo.nodes[node].speed,
+                            atol=1e-06,
+                        )
 
     def test_hetero_observation_has_node_columns(self):
         pipe = api.get_pipeline("serve3-hetero").build()
@@ -325,17 +388,27 @@ class TestHeteroClosedLoop:
 
     @pytest.fixture(scope="class")
     def hetero_pipeline(self):
-        return api.replace(api.get_pipeline("paper-4stage"),
-                           cluster=api.get_cluster("edge-hetero-3"))
+        return api.replace(
+            api.get_pipeline("paper-4stage"),
+            cluster=api.get_cluster("edge-hetero-3"),
+        )
 
     def _serve(self, pipeline, name, params=None):
         exp = api.ExperimentSpec(
             pipeline=pipeline,
-            scenario=api.replace(api.get_scenario("bursty"), rate=25.0,
-                                 seed=self.EVAL_SEED, horizon=self.HORIZON),
-            controller=api.replace(api.get_controller(name),
-                                   seed=self.EVAL_SEED, train_episodes=0),
-            backend="runtime")
+            scenario=api.replace(
+                api.get_scenario("bursty"),
+                rate=25.0,
+                seed=self.EVAL_SEED,
+                horizon=self.HORIZON,
+            ),
+            controller=api.replace(
+                api.get_controller(name),
+                seed=self.EVAL_SEED,
+                train_episodes=0,
+            ),
+            backend="runtime",
+        )
         sess = api.Session.from_spec(exp)
         if params is not None:
             sess.with_params(params)
@@ -344,24 +417,34 @@ class TestHeteroClosedLoop:
 
     def test_opd_beats_greedy_and_random(self, hetero_pipeline):
         import jax
-        from repro.core import (OPDTrainer, PPOConfig,
-                                run_episodes_vectorized)
+        from repro.core import OPDTrainer, PPOConfig, run_episodes_vectorized
         pipe = hetero_pipeline.build()
-        scen = api.replace(api.get_scenario("bursty"), rate=25.0,
-                           seed=self.TRAIN_SEED, horizon=self.HORIZON)
+        scen = api.replace(
+            api.get_scenario("bursty"),
+            rate=25.0,
+            seed=self.TRAIN_SEED,
+            horizon=self.HORIZON,
+        )
 
         def make_env(s):
             return PipelineEnv(pipe, scen.train_trace(s, seconds=600), seed=s)
 
-        val_traces = np.stack([scen.train_trace(1000 + i, seconds=600)
-                               for i in range(4)])
-        tr = OPDTrainer(pipe, make_env, ppo=PPOConfig(expert_freq=2),
-                        seed=self.TRAIN_SEED, num_envs=2)
+        val_traces = np.stack(
+            [scen.train_trace(1000 + i, seconds=600) for i in range(4)]
+        )
+        tr = OPDTrainer(
+            pipe,
+            make_env,
+            ppo=PPOConfig(expert_freq=2),
+            seed=self.TRAIN_SEED,
+            num_envs=2,
+        )
         best, best_val = None, -np.inf
         for ep in range(1, 13):
             tr.train_episode(ep, env_seed=ep)
-            val = float(np.mean(run_episodes_vectorized(
-                pipe, tr.params, val_traces)["rewards"]))
+            val = float(
+                np.mean(run_episodes_vectorized(pipe, tr.params, val_traces)["rewards"])
+            )
             if val > best_val:
                 best, best_val = jax.tree.map(np.asarray, tr.params), val
 

@@ -13,8 +13,14 @@ from _hyp import given, settings, st
 
 from repro import api
 from repro.cluster import PipelineEnv, make_trace
-from repro.core import (OPDTrainer, PPOConfig, action_to_config, compute_gae,
-                        head_sizes, init_policy)
+from repro.core import (
+    OPDTrainer,
+    PPOConfig,
+    action_to_config,
+    compute_gae,
+    head_sizes,
+    init_policy,
+)
 from repro.core import vecenv
 from repro.core.mdp import QoSWeights
 
@@ -23,8 +29,7 @@ WEIGHTS = QoSWeights()
 
 def _random_actions(pipe, rng, n):
     sizes = head_sizes(pipe)
-    return [np.array([rng.integers(0, s) for s in sizes], np.int32)
-            for _ in range(n)]
+    return [np.array([rng.integers(0, s) for s in sizes], np.int32) for _ in range(n)]
 
 
 class TestStepEquivalence:
@@ -46,16 +51,19 @@ class TestStepEquivalence:
         rng = np.random.default_rng(0)
         for a in _random_actions(pipe, rng, env.n_steps):
             obs_r, r_ref, _, info = env.step(action_to_config(pipe, a))
-            state, obs_v, r_vec, m = vecenv.step(tables, state,
-                                                 jnp.asarray(a), tr32,
-                                                 WEIGHTS)
+            state, obs_v, r_vec, m = vecenv.step(
+                tables,
+                state,
+                jnp.asarray(a),
+                tr32,
+                WEIGHTS,
+            )
             assert np.isclose(r_ref, float(r_vec), rtol=1e-4, atol=5e-2)
             assert np.allclose(obs_r, np.asarray(obs_v), atol=1e-3)
             assert bool(m["infeasible"]) == info["infeasible"]
             for k in ("qos", "cost", "latency", "throughput", "excess",
                       "demand"):
-                assert np.isclose(info[k], float(m[k]), rtol=1e-4,
-                                  atol=5e-2), k
+                assert np.isclose(info[k], float(m[k]), rtol=0.0001, atol=0.05), k
 
     def test_decode_action_matches_action_to_config(self):
         pipe = api.get_pipeline("paper-4stage").build()
@@ -77,9 +85,13 @@ class TestGAE:
         r = np.asarray(rewards, np.float32)
         v = np.linspace(-1.0, 1.0, len(r)).astype(np.float32)
         adv_np, ret_np = compute_gae(r, v, 0.5, gamma=gamma, lam=lam)
-        adv_j, ret_j = vecenv.gae_scan(jnp.asarray(r), jnp.asarray(v),
-                                       jnp.float32(0.5), gamma=gamma,
-                                       lam=lam)
+        adv_j, ret_j = vecenv.gae_scan(
+            jnp.asarray(r),
+            jnp.asarray(v),
+            jnp.float32(0.5),
+            gamma=gamma,
+            lam=lam,
+        )
         assert np.allclose(adv_np, np.asarray(adv_j), atol=1e-4)
         assert np.allclose(ret_np, np.asarray(ret_j), atol=1e-4)
 
@@ -88,11 +100,15 @@ class TestGAE:
         r = rng.normal(size=(3, 17)).astype(np.float32)
         v = rng.normal(size=(3, 17)).astype(np.float32)
         lv = rng.normal(size=3).astype(np.float32)
-        adv, ret = vecenv.vec_gae(jnp.asarray(r), jnp.asarray(v),
-                                  jnp.asarray(lv), gamma=0.97, lam=0.9)
+        adv, ret = vecenv.vec_gae(
+            jnp.asarray(r),
+            jnp.asarray(v),
+            jnp.asarray(lv),
+            gamma=0.97,
+            lam=0.9,
+        )
         for i in range(3):
-            a_i, r_i = compute_gae(r[i], v[i], float(lv[i]), gamma=0.97,
-                                   lam=0.9)
+            a_i, r_i = compute_gae(r[i], v[i], float(lv[i]), gamma=0.97, lam=0.9)
             assert np.allclose(np.asarray(adv[i]), a_i, atol=1e-4)
             assert np.allclose(np.asarray(ret[i]), r_i, atol=1e-4)
 
@@ -103,23 +119,34 @@ class TestVecRollout:
     def _setup(self):
         pipe = api.get_pipeline("serve2").build()
         tables = vecenv.tables_from_pipeline(pipe)
-        params = init_policy(jax.random.PRNGKey(0), pipe.n_tasks * 9,
-                             head_sizes(pipe))
+        params = init_policy(jax.random.PRNGKey(0), pipe.n_tasks * 9, head_sizes(pipe))
         traces = jnp.asarray(
-            np.stack([make_trace("fluctuating", seed=i, seconds=self.SECONDS)
-                      for i in range(self.B)]), jnp.float32)
-        keys = jax.vmap(lambda s: jax.random.fold_in(jax.random.PRNGKey(9),
-                                                     s))(jnp.arange(self.B))
+            np.stack(
+                [
+                    make_trace("fluctuating", seed=i, seconds=self.SECONDS)
+                    for i in range(self.B)
+                ]
+            ),
+            jnp.float32,
+        )
+        keys = jax.vmap(lambda s: jax.random.fold_in(jax.random.PRNGKey(9), s))(
+            jnp.arange(self.B)
+        )
         return pipe, tables, params, traces, keys
 
     def test_shapes_and_finiteness(self):
         pipe, tables, params, traces, keys = self._setup()
         n_steps = self.SECONDS // 10
-        out = vecenv.vec_rollout(params, tables, traces, keys,
-                                 n_steps=n_steps, weights=WEIGHTS)
+        out = vecenv.vec_rollout(
+            params,
+            tables,
+            traces,
+            keys,
+            n_steps=n_steps,
+            weights=WEIGHTS,
+        )
         assert out["states"].shape == (self.B, n_steps, pipe.n_tasks * 9)
-        assert out["actions"].shape == (self.B, n_steps,
-                                        len(head_sizes(pipe)))
+        assert out["actions"].shape == (self.B, n_steps, len(head_sizes(pipe)))
         assert out["last_value"].shape == (self.B,)
         for k in ("rewards", "values", "logps", "qos"):
             assert out[k].shape == (self.B, n_steps)
@@ -132,11 +159,23 @@ class TestVecRollout:
         axis of the inputs permutes every output exactly."""
         _, tables, params, traces, keys = self._setup()
         n_steps = self.SECONDS // 10
-        out = vecenv.vec_rollout(params, tables, traces, keys,
-                                 n_steps=n_steps, weights=WEIGHTS)
+        out = vecenv.vec_rollout(
+            params,
+            tables,
+            traces,
+            keys,
+            n_steps=n_steps,
+            weights=WEIGHTS,
+        )
         perm = np.random.default_rng(perm_seed).permutation(self.B)
-        out_p = vecenv.vec_rollout(params, tables, traces[perm], keys[perm],
-                                   n_steps=n_steps, weights=WEIGHTS)
+        out_p = vecenv.vec_rollout(
+            params,
+            tables,
+            traces[perm],
+            keys[perm],
+            n_steps=n_steps,
+            weights=WEIGHTS,
+        )
         for k in out:
             want = np.asarray(out[k])[perm]
             got = np.asarray(out_p[k])
@@ -147,17 +186,26 @@ class TestVecRollout:
         yields the same rewards — the scan trajectory is a real episode."""
         pipe, tables, params, traces, keys = self._setup()
         n_steps = self.SECONDS // 10
-        out = vecenv.vec_rollout(params, tables, traces, keys,
-                                 n_steps=n_steps, weights=WEIGHTS)
+        out = vecenv.vec_rollout(
+            params,
+            tables,
+            traces,
+            keys,
+            n_steps=n_steps,
+            weights=WEIGHTS,
+        )
         for i in range(2):
-            env = PipelineEnv(pipe, np.asarray(traces[i], np.float64),
-                              seed=0)
+            env = PipelineEnv(pipe, np.asarray(traces[i], np.float64), seed=0)
             env.reset()
             for t in range(n_steps):
                 a = np.asarray(out["actions"][i, t])
                 _, r, _, _ = env.step(action_to_config(pipe, a))
-                assert np.isclose(r, float(out["rewards"][i, t]),
-                                  rtol=1e-4, atol=5e-2)
+                assert np.isclose(
+                    r,
+                    float(out["rewards"][i, t]),
+                    rtol=0.0001,
+                    atol=0.05,
+                )
 
 
 class TestBatchEvaluation:
@@ -166,48 +214,63 @@ class TestBatchEvaluation:
         run_episode loop driving OPDPolicy on the same traces."""
         from repro.core import OPDPolicy, run_episode, run_episodes_vectorized
         pipe = api.get_pipeline("serve2").build()
-        params = init_policy(jax.random.PRNGKey(2), pipe.n_tasks * 9,
-                             head_sizes(pipe))
-        traces = np.stack([make_trace("steady_low", seed=i, seconds=100)
-                           for i in range(2)])
+        params = init_policy(jax.random.PRNGKey(2), pipe.n_tasks * 9, head_sizes(pipe))
+        traces = np.stack(
+            [make_trace("steady_low", seed=i, seconds=100) for i in range(2)]
+        )
         batch = run_episodes_vectorized(pipe, params, traces)
         for i in range(2):
             env = PipelineEnv(pipe, traces[i], seed=0)
             legacy = run_episode(env, OPDPolicy(pipe, params, greedy=True))
-            assert np.allclose(batch["rewards"][i], legacy["reward"],
-                               rtol=1e-4, atol=5e-2)
-            assert np.allclose(batch["qos"][i], legacy["qos"],
-                               rtol=1e-4, atol=5e-2)
+            assert np.allclose(
+                batch["rewards"][i],
+                legacy["reward"],
+                rtol=0.0001,
+                atol=0.05,
+            )
+            assert np.allclose(batch["qos"][i], legacy["qos"], rtol=0.0001, atol=0.05)
 
 
 class TestTrainerIntegration:
     def _make_env_fn(self, pipe):
         def make_env(seed):
-            return PipelineEnv(pipe, make_trace("fluctuating", seed=seed,
-                                                seconds=120), seed=seed)
+            return PipelineEnv(
+                pipe,
+                make_trace("fluctuating", seed=seed, seconds=120),
+                seed=seed,
+            )
         return make_env
 
     def test_vec_branch_updates_params(self):
         pipe = api.get_pipeline("serve2").build()
-        tr = OPDTrainer(pipe, self._make_env_fn(pipe),
-                        ppo=PPOConfig(epochs=1, expert_freq=2), seed=0,
-                        num_envs=4)
+        tr = OPDTrainer(
+            pipe,
+            self._make_env_fn(pipe),
+            ppo=PPOConfig(epochs=1, expert_freq=2),
+            seed=0,
+            num_envs=4,
+        )
         assert tr._vec_ok
         before = jax.tree.map(jnp.copy, tr.params)
         tr.train_episode(1)                       # 1 % 2 != 0 -> vectorized
         assert tr.history["expert"] == [False]
         delta = jax.tree.reduce(
-            lambda a, b: a + b,
-            jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()),
-                         before, tr.params))
+            lambda a,
+            b: a + b,
+            jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()), before, tr.params),
+        )
         assert delta > 0
         assert np.isfinite(tr.history["loss"]).all()
 
     def test_expert_episode_falls_back_to_legacy(self):
         pipe = api.get_pipeline("serve2").build()
-        tr = OPDTrainer(pipe, self._make_env_fn(pipe),
-                        ppo=PPOConfig(epochs=1, expert_freq=1), seed=0,
-                        num_envs=4)
+        tr = OPDTrainer(
+            pipe,
+            self._make_env_fn(pipe),
+            ppo=PPOConfig(epochs=1, expert_freq=1),
+            seed=0,
+            num_envs=4,
+        )
         tr.train_episode(1)                       # expert -> legacy loop
         assert tr.history["expert"] == [True]
         assert len(tr.expert_states) > 0
@@ -217,17 +280,24 @@ class TestSessionReproducibility:
     def _spec(self):
         return api.ExperimentSpec(
             pipeline=api.get_pipeline("serve2"),
-            scenario=api.replace(api.get_scenario("fluctuating"), rate=60.0,
-                                 seed=4, horizon=100),
-            controller=api.replace(api.get_controller("opd"),
-                                   train_episodes=2, train_seconds=120,
-                                   num_envs=2),
-            backend="analytic")
+            scenario=api.replace(
+                api.get_scenario("fluctuating"),
+                rate=60.0,
+                seed=4,
+                horizon=100,
+            ),
+            controller=api.replace(
+                api.get_controller("opd"),
+                train_episodes=2,
+                train_seconds=120,
+                num_envs=2,
+            ),
+            backend="analytic",
+        )
 
     def test_num_envs_roundtrips_through_json(self):
         spec = self._spec()
-        back = api.ExperimentSpec.from_dict(
-            json.loads(json.dumps(spec.to_dict())))
+        back = api.ExperimentSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
         assert back == spec
         assert back.controller.num_envs == 2
 
