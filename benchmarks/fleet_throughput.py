@@ -1,0 +1,135 @@
+"""Multi-tenant fleet serving throughput: the registered 3-tenant fleet on
+the heterogeneous edge cell, with every tenant's arrival rate cranked to
+drive 1e5 (quick) to ~1e6 requests through the shared event loop. Reports
+per-tenant p50/p95/p99 and shed rate, fleet-wide shed rate, and the event
+loop's wall-clock processing rate (events/s — the fleet's simulation
+throughput).
+
+``inv_p99`` (1/p99 seconds, higher is better) is emitted per tenant so the
+ratio gate in CI can guard tail latency regressions with the same
+"candidate/baseline >= min-ratio" arithmetic as the throughput metrics.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import save_results
+from repro import api
+
+# per-tenant arrival rates (req/s) sized so the quick run offers >1e5
+# requests over its horizon while the cluster, fully allocated, can still
+# serve the large majority (shed stays a reported tail, not the bulk)
+QUICK_RATES = {"interactive": 400.0, "analytics": 300.0, "batch": 250.0}
+QUICK_HORIZON = 120
+FULL_HORIZON = 1200
+ADMISSION_LIMIT = 3000.0
+
+
+def _scaled_spec(horizon: int):
+    spec = api.get_fleet("fleet-3tenant-hetero")
+    tenants = tuple(
+        api.replace(
+            t,
+            scenario=api.replace(
+                t.scenario, rate=QUICK_RATES[t.name], horizon=horizon
+            ),
+        )
+        for t in spec.tenants
+    )
+    return api.replace(
+        spec,
+        name=f"{spec.name}-bench",
+        tenants=tenants,
+        admission_limit=ADMISSION_LIMIT,
+    )
+
+
+def run(quick: bool = False):
+    horizon = QUICK_HORIZON if quick else FULL_HORIZON
+    spec = _scaled_spec(horizon)
+    sess = api.FleetSession.from_spec(spec)
+    rep = sess.serve()
+    s, wall = rep["summary"], rep["serve_wall_s"]
+
+    fleet = s["fleet"]
+    payload = {
+        "fleet": {
+            "tenants": fleet["tenants"],
+            "horizon_s": horizon,
+            "offered": fleet["offered"],
+            "requests": fleet["served"],
+            "shed": fleet["shed"],
+            "shed_rate": fleet["shed_rate"],
+            "events": fleet["events"],
+            "events_per_s": fleet["events_per_s"],
+            "virtual_time_s": fleet["virtual_time_s"],
+            "wall_s": wall,
+            "reallocations": fleet["reallocations"],
+        },
+        "tenants": {},
+    }
+
+    def ms(v):
+        return None if v is None else v * 1e3
+
+    rows = [
+        (
+            "fleet",
+            "fleet.requests",
+            fleet["served"],
+            "completed requests across all tenants",
+        ),
+        (
+            "fleet",
+            "fleet.events_per_s",
+            round(fleet["events_per_s"], 0),
+            "shared event-loop processing rate",
+        ),
+        (
+            "fleet",
+            "fleet.shed_rate",
+            round(fleet["shed_rate"], 4),
+            "fleet-wide load-shedding fraction",
+        ),
+    ]
+    for name, t in s["tenants"].items():
+        res = {
+            "offered": t["arrived"],
+            "served": t["served"],
+            "shed": t["shed"],
+            "shed_rate": t["shed_rate"],
+            "priority": t["priority"],
+            "share": t["share"],
+            "p50_ms": ms(t["p50"]),
+            "p95_ms": ms(t["p95"]),
+            "p99_ms": ms(t["p99"]),
+            "inv_p99": None if t["p99"] is None else 1.0 / t["p99"],
+        }
+        payload["tenants"][name] = res
+        rows += [
+            (
+                "fleet",
+                f"{name}.p99_ms",
+                None if res["p99_ms"] is None else round(res["p99_ms"], 1),
+                "per-tenant tail latency on the shared cluster",
+            ),
+            (
+                "fleet",
+                f"{name}.shed_rate",
+                round(res["shed_rate"], 4),
+                "priority-graded load shedding",
+            ),
+        ]
+
+    floor = 100_000
+    assert fleet["served"] >= floor, (
+        f"fleet completed only {fleet['served']} requests (< {floor}); "
+        f"the benchmark must exercise CI-scale load"
+    )
+    save_results("fleet_throughput", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import bench_main
+
+    bench_main(run)

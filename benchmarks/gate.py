@@ -3,10 +3,16 @@ fraction of the committed baseline.
 
     python -m benchmarks.gate CURRENT.json \\
         --baseline experiments/results/train_throughput.json \\
-        --metric vectorized.32.steps_per_s --min-ratio 0.5
+        --metric vectorized.32.steps_per_s --min-ratio 0.5 \\
+        --metric speedup_episodes_at_32 --min-ratio 0.5
 
-``--metric`` is a dotted path into the JSON payload. Higher is better; the
-gate passes when current >= min-ratio * baseline.
+``--metric`` is a dotted path into the JSON payload; repeat it to gate
+several metrics in one invocation (one comparison per pair, every failure
+reported before exiting). ``--min-ratio`` pairs positionally with the
+metrics; give exactly one to broadcast it across all of them. Higher is
+better; a comparison passes when current >= min-ratio * baseline. Null,
+NaN and zero metric values are hard errors — each would otherwise make the
+ratio comparison silently meaningless.
 """
 
 import argparse
@@ -30,30 +36,62 @@ def lookup(payload: dict, dotted: str) -> float:
         # a NaN silently loses every comparison — fail loudly instead of
         # letting `ratio >= min_ratio` pass or fail by accident
         raise SystemExit(f"GATE ERROR: metric {dotted!r} is NaN")
+    if value == 0.0:
+        # a zero baseline makes every candidate pass (ratio = inf) and a
+        # zero candidate can only mean nothing ran — both are measurement
+        # bugs, not regressions; refuse to compare
+        raise SystemExit(f"GATE ERROR: metric {dotted!r} is zero")
     return value
-
-
-def load_metric(path: str, dotted: str) -> float:
-    with open(path) as f:
-        return lookup(json.load(f), dotted)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="fresh result JSON (e.g. from --out DIR)")
     ap.add_argument("--baseline", required=True, help="committed baseline JSON")
-    ap.add_argument("--metric", default=DEFAULT_METRIC, help="dotted metric path")
-    ap.add_argument("--min-ratio", type=float, default=0.5, help="fail threshold")
+    ap.add_argument(
+        "--metric",
+        action="append",
+        default=None,
+        help="dotted metric path (repeatable)",
+    )
+    ap.add_argument(
+        "--min-ratio",
+        action="append",
+        type=float,
+        default=None,
+        help="fail threshold; one per --metric, or a single value broadcast "
+        "across all metrics (default 0.5)",
+    )
     args = ap.parse_args(argv)
 
-    cur = load_metric(args.current, args.metric)
-    base = load_metric(args.baseline, args.metric)
-    ratio = cur / base if base else float("inf")
-    ok = ratio >= args.min_ratio
-    status = "OK" if ok else "REGRESSION"
-    print(f"{status}: {args.metric} current={cur:.1f} baseline={base:.1f}")
-    print(f"ratio={ratio:.2f} vs min-ratio={args.min_ratio}")
-    return 0 if ok else 1
+    metrics = args.metric or [DEFAULT_METRIC]
+    ratios = args.min_ratio or [0.5]
+    if len(ratios) == 1:
+        ratios = ratios * len(metrics)
+    if len(ratios) != len(metrics):
+        raise SystemExit(
+            f"GATE ERROR: {len(metrics)} --metric but {len(ratios)} "
+            f"--min-ratio (give one per metric, or one total)"
+        )
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failed = 0
+    for metric, min_ratio in zip(metrics, ratios, strict=True):
+        cur = lookup(current, metric)
+        base = lookup(baseline, metric)
+        ratio = cur / base
+        ok = ratio >= min_ratio
+        failed += 0 if ok else 1
+        status = "OK" if ok else "REGRESSION"
+        print(
+            f"{status}: {metric} current={cur:.1f} baseline={base:.1f} "
+            f"ratio={ratio:.2f} vs min-ratio={min_ratio}"
+        )
+    return 0 if failed == 0 else 1
 
 
 if __name__ == "__main__":

@@ -23,7 +23,7 @@ def main() -> None:
         default=None,
         help="comma-separated subset: "
         "fig3,fig45,fig6,fig7,roofline,runtime,train,"
-        "runtime_train,telemetry",
+        "runtime_train,telemetry,fleet",
     )
     args = bench_args(parser=ap)
 
@@ -32,6 +32,7 @@ def main() -> None:
         fig45_workloads,
         fig6_decision_time,
         fig7_convergence,
+        fleet_throughput,
         roofline,
         runtime_throughput,
         runtime_train_throughput,
@@ -48,6 +49,7 @@ def main() -> None:
         "train": train_throughput.run,
         "runtime_train": runtime_train_throughput.run,
         "telemetry": telemetry_queries.run,
+        "fleet": fleet_throughput.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     print("benchmark,metric,value,reference")

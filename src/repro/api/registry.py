@@ -16,13 +16,15 @@ from __future__ import annotations
 from repro.cluster.workloads import WORKLOADS
 from repro.serving.arrivals import SCENARIOS
 
-from repro.api.specs import (ClusterSpec, ControllerSpec, NodeSpec,
-                             PipelineSpec, ScenarioSpec)
+from repro.api.specs import (ClusterSpec, ControllerSpec, FleetSpec,
+                             NodeSpec, PipelineSpec, ScenarioSpec,
+                             TenantSpec)
 
 _PIPELINES: dict[str, PipelineSpec] = {}
 _SCENARIOS: dict[str, ScenarioSpec] = {}
 _CONTROLLERS: dict[str, tuple[ControllerSpec, object]] = {}
 _CLUSTERS: dict[str, ClusterSpec] = {}
+_FLEETS: dict[str, FleetSpec] = {}
 
 
 # ---------------------------------------------------------------- pipelines --
@@ -80,6 +82,25 @@ def get_cluster(name: str) -> ClusterSpec:
 
 def list_clusters() -> tuple[str, ...]:
     return tuple(sorted(_CLUSTERS))
+
+
+# ------------------------------------------------------------------- fleets --
+
+def register_fleet(spec: FleetSpec, *, name: str | None = None) -> FleetSpec:
+    _FLEETS[name or spec.name] = spec
+    return spec
+
+
+def get_fleet(name: str) -> FleetSpec:
+    try:
+        return _FLEETS[name]
+    except KeyError:
+        raise KeyError(f"unknown fleet {name!r}; "
+                       f"registered: {list_fleets()}") from None
+
+
+def list_fleets() -> tuple[str, ...]:
+    return tuple(sorted(_FLEETS))
 
 
 # -------------------------------------------------------------- controllers --
@@ -180,6 +201,37 @@ def _register_builtin_scenarios():
                                              horizon=1200))
 
 
+def _register_builtin_fleets():
+    # three tenant classes sharing the heterogeneous big/medium/small edge
+    # cell: a latency-critical interactive tenant (highest priority, tight
+    # p99 SLO), a steady analytics tenant, and a best-effort batch tenant
+    # (lowest priority — first to shed under fleet overload)
+    register_fleet(FleetSpec(
+        name="fleet-3tenant-hetero",
+        cluster=_CLUSTERS["edge-hetero-3"],
+        admission_limit=400.0,
+        tenants=(
+            TenantSpec(name="interactive",
+                       pipeline=_PIPELINES["serve2"],
+                       scenario=ScenarioSpec(kind="bursty", rate=25.0,
+                                             seed=0, horizon=120),
+                       controller=ControllerSpec(name="greedy"),
+                       priority=3, slo_p99=2.0),
+            TenantSpec(name="analytics",
+                       pipeline=_PIPELINES["serve3"],
+                       scenario=ScenarioSpec(kind="poisson", rate=15.0,
+                                             seed=1, horizon=120),
+                       controller=ControllerSpec(name="ipa"),
+                       priority=2, slo_p99=5.0),
+            TenantSpec(name="batch",
+                       pipeline=_PIPELINES["serve2"],
+                       scenario=ScenarioSpec(kind="ramp", rate=20.0,
+                                             seed=2, horizon=120),
+                       controller=ControllerSpec(name="greedy"),
+                       priority=1),
+        )))
+
+
 def _register_builtin_controllers():
     from repro.core.baselines import GreedyPolicy, IPAPolicy, RandomPolicy
     from repro.core.expert import ExpertPolicy
@@ -201,4 +253,5 @@ def _register_builtin_controllers():
 _register_builtin_clusters()
 _register_builtin_pipelines()
 _register_builtin_scenarios()
+_register_builtin_fleets()
 _register_builtin_controllers()

@@ -24,7 +24,7 @@ from repro.core.controller import decide
 from repro.core.ppo import OPDTrainer, PPOConfig
 
 from repro.api.registry import controller_factory
-from repro.api.specs import ExperimentSpec
+from repro.api.specs import ExperimentSpec, FleetSpec
 
 # per-step scalar keys copied into the report (runtime adds percentiles etc.)
 _STEP_KEYS = ("qos", "cost", "latency", "throughput", "excess", "demand")
@@ -220,3 +220,96 @@ def run_experiment(spec: ExperimentSpec | dict | str, *, log=None,
     sess.train(log=log)
     sess.serve(on_step=on_step)
     return sess.report()
+
+
+class FleetSession:
+    """The Session facade for a multi-tenant fleet: builds every tenant's
+    pipeline on the shared cluster, trains learned tenant controllers via
+    per-tenant sub-Sessions, then serves all tenants on one shared event
+    loop (``serving.fleet.FleetRuntime``). Fully seeded from the spec."""
+
+    def __init__(self, spec: FleetSpec):
+        self.spec = spec
+        self.fleet = None
+        self._params: dict[str, object] = {}    # tenant name -> trained params
+        self._report: dict | None = None
+
+    @classmethod
+    def from_spec(cls, spec: FleetSpec | dict | str) -> FleetSession:
+        if isinstance(spec, str):
+            spec = json.loads(spec)
+        if isinstance(spec, dict):
+            spec = FleetSpec.from_dict(spec)
+        return cls(spec)
+
+    def train(self, *, log=None) -> FleetSession:
+        """PPO-train every learned tenant controller on its own pipeline
+        view (no-op for baseline tenants)."""
+        for t in self.spec.tenants:
+            if (t.controller.name in _TRAINABLE
+                    and t.controller.train_episodes > 0
+                    and t.name not in self._params):
+                sub = Session(ExperimentSpec(
+                    pipeline=self.spec.tenant_pipeline(t),
+                    scenario=t.scenario, controller=t.controller,
+                    seq_len=self.spec.seq_len))
+                sub.train(log=log)
+                self._params[t.name] = sub.trainer.params
+        return self
+
+    def build_fleet(self, *, horizon: int | None = None):
+        from repro.serving.fleet import build_fleet
+        entries = []
+        for t in self.spec.tenants:
+            pipe = self.spec.tenant_pipeline(t).build()
+            controller = controller_factory(t.controller.name)(
+                t.controller, pipe, self._params.get(t.name))
+            entries.append({"name": t.name, "pipe": pipe,
+                            "arrivals": t.scenario.build_arrivals(),
+                            "controller": controller,
+                            "priority": t.priority, "slo_p99": t.slo_p99})
+        return build_fleet(entries,
+                           admission_limit=self.spec.admission_limit,
+                           min_share=self.spec.min_share,
+                           horizon=horizon or self.spec.horizon,
+                           seq_len=self.spec.seq_len)
+
+    def serve(self, *, horizon: int | None = None, on_step=None) -> dict:
+        """Run the fleet control loop: one ``step_interval`` per adaptation
+        interval over the horizon, then drain. ``on_step(fleet, interval)``
+        is called after each interval with the per-tenant results."""
+        from repro.core.mdp import ADAPTATION_INTERVAL
+        self.train()
+        horizon = int(horizon or self.spec.horizon)
+        self.fleet = self.build_fleet(horizon=horizon)
+        n_steps = max(1, horizon // ADAPTATION_INTERVAL)
+        rewards: dict[str, list[float]] = {t.name: []
+                                           for t in self.spec.tenants}
+        sheds: dict[str, list[int]] = {t.name: [] for t in self.spec.tenants}
+        wall0 = time.perf_counter()
+        for _ in range(n_steps):
+            interval = self.fleet.step_interval()
+            for name, info in interval.items():
+                rewards[name].append(float(info["reward"]))
+                sheds[name].append(int(info["shed"]))
+            if on_step:
+                on_step(self.fleet, interval)
+        self.fleet.drain()
+        wall = time.perf_counter() - wall0
+        summary = self.fleet.summary()
+        summary["fleet"]["events_per_s"] = (self.fleet.loop.events
+                                            / max(wall, 1e-9))
+        self._report = {
+            "fleet_spec": self.spec.to_dict(),
+            "serve_wall_s": wall,
+            "rewards": rewards,
+            "shed_per_interval": sheds,
+            "summary": {k: (v.tolist() if isinstance(v, np.ndarray) else v)
+                        for k, v in summary.items()},
+        }
+        return self._report
+
+    def report(self) -> dict:
+        if self._report is None:
+            self.serve()
+        return self._report

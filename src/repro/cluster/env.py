@@ -174,9 +174,13 @@ class RuntimeEnv(_ConfigEnvBase):
                  weights: QoSWeights | None = None, history: int = 120,
                  predictor=None, executors: list | None = None,
                  max_wait: float | None = None, seq_len: int = 32,
-                 vocab: int = 256):
+                 vocab: int = 256, loop=None, rid_base: int = 0):
         # all stochasticity derives from arrivals.seed (arrival times and
-        # request tokens) — the env itself is deterministic
+        # request tokens) — the env itself is deterministic.  ``loop`` (a
+        # serving.runtime.EventLoop) shares the event loop with other envs
+        # (multi-tenant fleets; do not reset() a shared-loop env twice —
+        # the superseded runtime's events would stay heaped); ``rid_base``
+        # offsets request ids so tenants stay distinguishable in telemetry.
         from repro.serving.runtime import DEFAULT_MAX_WAIT
         self.pipe = pipe
         self.arrivals = arrivals
@@ -187,6 +191,8 @@ class RuntimeEnv(_ConfigEnvBase):
         self.max_wait = DEFAULT_MAX_WAIT if max_wait is None else max_wait
         self.seq_len = seq_len
         self.vocab = vocab
+        self._loop = loop
+        self.rid_base = int(rid_base)
         self.monitor = Monitor(history)
         self.n_steps = max(1, self.horizon // ADAPTATION_INTERVAL)
         self.reset()
@@ -202,9 +208,10 @@ class RuntimeEnv(_ConfigEnvBase):
         self.cfg = self.default_config()
         self.runtime = ServingRuntime.from_pipeline(
             self.pipe, cfg=self.cfg, max_wait=self.max_wait,
-            seq_len=self.seq_len, executors=self.executors)
+            seq_len=self.seq_len, executors=self.executors, loop=self._loop)
         self.submitted = self.runtime.load(self.arrivals, self.horizon,
-                                           vocab=self.vocab)
+                                           vocab=self.vocab,
+                                           rid_base=self.rid_base)
         # prefill the predictor's history with the t=0 expected rate — the
         # newest slot is what _current_load reads for the first observation
         self.monitor = Monitor(self.monitor.history)
@@ -213,8 +220,12 @@ class RuntimeEnv(_ConfigEnvBase):
             self.monitor.record(rate0)
         return self._observe()
 
-    def step(self, action: Config):
-        rt, w = self.runtime, self.w
+    def begin_step(self, action: Config):
+        """Apply ``action`` without advancing time. Returns the pending
+        interval ``(t0, t1, switched, apply_wall_s)`` for ``finish_step``.
+        Split out so a fleet can reconfigure *every* tenant before the
+        shared event loop advances any of them through the interval."""
+        rt = self.runtime
         self.cfg = action
         t0 = rt.now
         t1 = t0 + ADAPTATION_INTERVAL
@@ -222,7 +233,13 @@ class RuntimeEnv(_ConfigEnvBase):
         switched = rt.apply_config(
             action, cold_start=COLD_START_FRACTION * ADAPTATION_INTERVAL)
         apply_wall_s = time.perf_counter() - wall0
-        rt.run_until(t1)
+        return t0, t1, switched, apply_wall_s
+
+    def finish_step(self, pending):
+        """Score the interval opened by ``begin_step`` after the event loop
+        has advanced past ``t1`` (scores ``self.cfg``)."""
+        t0, t1, switched, apply_wall_s = pending
+        rt, w, action = self.runtime, self.w, self.cfg
 
         tel = rt.telemetry
         arrived = tel.arrived_in(t0, t1)
@@ -258,10 +275,16 @@ class RuntimeEnv(_ConfigEnvBase):
                 "switched": switched, "migrations": rt.last_migrations,
                 "apply_wall_s": apply_wall_s,
                 "backlog": rt.in_system,
+                "shed": tel.shed_in(t0, t1),
                 "queue_depths": rt.queue_depths(),
                 "node_utilization": rt.node_utilization(),
                 **tel.latency_percentiles(t0=t0, t1=t1)}
         return self._observe(), float(r), done, info
+
+    def step(self, action: Config):
+        pending = self.begin_step(action)
+        self.runtime.run_until(pending[1])
+        return self.finish_step(pending)
 
     def drain(self) -> dict:
         """Finish all in-flight work after the last interval; final summary."""

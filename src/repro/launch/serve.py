@@ -8,12 +8,17 @@ data plane the OPD controller manages — plus the event-driven pipeline mode.
         [--scenario bursty] [--horizon 120] [--policy greedy] [--seed 3] \
         [--cluster edge-hetero-3]
 
+    PYTHONPATH=src python -m repro.launch.serve \
+        --fleet fleet-3tenant-hetero [--horizon 120]
+
 Single-arch mode runs prefill once to populate the cache, then streams
 decode steps; on TPU the same serve_step is what launch/dryrun.py compiles
 for the decode_32k / long_500k shapes of the production mesh. ``--pipeline``
 instead serves an arrival scenario through the event-driven runtime with any
 registered controller in the loop (``--policy opd`` trains the agent first),
-printing per-interval telemetry. Everything is built from ``repro.api``
+printing per-interval telemetry. ``--fleet`` serves a registered multi-tenant
+fleet (N pipelines on one shared cluster and event loop) and prints the
+per-tenant shed / latency summary. Everything is built from ``repro.api``
 specs, so the run is reproducible from its seeds.
 """
 from __future__ import annotations
@@ -71,6 +76,40 @@ def run_pipeline(args):
               + " ".join(f"{u:.2f}" for u in s.get("node_utilization", [])))
 
 
+def run_fleet(args):
+    from repro import api
+
+    spec = api.get_fleet(args.fleet)
+    sess = api.FleetSession.from_spec(spec)
+
+    def show(fleet, interval):
+        now = fleet.loop.now
+        for name, info in interval.items():
+            print(f"t={now:5.0f}s {name:<12} demand={info['demand']:5.1f}/s "
+                  f"served={info['processed']:4d} shed={info['shed']:3d} "
+                  f"p95={_ms(info['p95'] if info['p95'] == info['p95'] else None)}"
+                  f" backlog={info['backlog']}")
+
+    rep = sess.serve(horizon=args.horizon, on_step=show)
+    s = rep["summary"]
+    for name, t in s["tenants"].items():
+        line = (f"tenant {name:<12} prio={t['priority']} "
+                f"share={t['share']:.2f} offered={t['arrived']:6d} "
+                f"served={t['served']:6d} shed={t['shed']:5d} "
+                f"({t['shed_rate'] * 100:.1f}%) p50={_ms(t['p50'])} "
+                f"p95={_ms(t['p95'])} p99={_ms(t['p99'])}")
+        if "slo_p99" in t:
+            line += (f" slo_p99={_ms(t['slo_p99'])} "
+                     f"{'MET' if t['slo_p99_met'] else 'MISSED'}")
+        print(line)
+    f = s["fleet"]
+    print(f"fleet {spec.name}: {f['tenants']} tenants, "
+          f"{f['served']}/{f['offered']} served "
+          f"(shed {f['shed']}, {f['shed_rate'] * 100:.1f}%), "
+          f"{f['events']} events ({f['events_per_s']:.0f}/s), "
+          f"{f['reallocations']} reallocations")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b", choices=sorted(ARCHS))
@@ -82,17 +121,23 @@ def main():
     ap.add_argument("--pipeline", action="store_true",
                     help="serve an arrival scenario through the event-driven "
                          "pipeline runtime instead of single-arch decode")
-    from repro.api import list_clusters, list_controllers, list_scenarios
+    from repro.api import (list_clusters, list_controllers, list_fleets,
+                           list_scenarios)
     ap.add_argument("--scenario", default="bursty", choices=list_scenarios())
     ap.add_argument("--policy", default="greedy", choices=list_controllers())
     ap.add_argument("--cluster", default=None, choices=list_clusters(),
                     help="place the pipeline on a registered cluster "
                          "topology (default: homogeneous scalar pool)")
+    ap.add_argument("--fleet", default=None, choices=list_fleets(),
+                    help="serve a registered multi-tenant fleet (N pipelines "
+                         "on one shared cluster and event loop)")
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--horizon", type=int, default=120)
     ap.add_argument("--rate", type=float, default=25.0)
     args = ap.parse_args()
 
+    if args.fleet:
+        return run_fleet(args)
     if args.pipeline:
         return run_pipeline(args)
 

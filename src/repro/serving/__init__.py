@@ -6,5 +6,7 @@ from repro.serving.arrivals import (ArrivalProcess, PoissonArrivals,
                                     RampArrivals, make_arrivals,
                                     arrivals_from_dict, SCENARIOS)
 from repro.serving.telemetry import Telemetry, percentile
-from repro.serving.runtime import (ServingRuntime, RuntimeStage,
+from repro.serving.runtime import (ServingRuntime, RuntimeStage, EventLoop,
                                    COLD_START_SECONDS)
+from repro.serving.fleet import (FleetRuntime, FleetTenant, build_fleet,
+                                 scale_topology)

@@ -18,6 +18,11 @@ simulator does, scored from measured telemetry.
 
 Event ordering is deterministic: ties in virtual time break by insertion
 sequence (FIFO), so identical seeds reproduce identical schedules.
+
+The event heap itself lives in an :class:`EventLoop` that a runtime either
+owns privately (the classic single-pipeline case) or shares with other
+runtimes — a multi-tenant fleet (`serving.fleet`) hosts N pipelines on one
+loop, interleaving their events in one deterministic virtual timeline.
 """
 from __future__ import annotations
 
@@ -34,6 +39,48 @@ from repro.serving.telemetry import Telemetry
 # COLD_START_FRACTION (0.3) of a 10 s adaptation interval's capacity.
 COLD_START_SECONDS = 3.0
 DEFAULT_MAX_WAIT = 0.25   # s a request may wait before a partial batch fires
+
+
+class EventLoop:
+    """A virtual-time event heap shared by one or more runtimes.
+
+    Each pushed event carries its owning runtime; ``run_until`` pops events
+    in (time, insertion-sequence) order and routes them back to the owner's
+    ``_handle``. The insertion sequence is global across owners, so a fleet
+    of runtimes sharing one loop interleaves deterministically — and a loop
+    with a single owner behaves exactly like the historical private heap.
+    """
+
+    def __init__(self):
+        self.now = 0.0
+        self.events = 0               # total events processed (fleet events/s)
+        self._heap: list[tuple] = []
+        self._seq = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, t: float, owner, kind: str, payload):
+        # owner sits *after* payload: seq is unique, so comparisons never
+        # reach it (runtimes are not orderable)
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload, owner))
+
+    def next_time(self) -> float | None:
+        return self._heap[0][0] if self._heap else None
+
+    def run_until(self, t_end: float):
+        """Process all events with time <= t_end; clock lands on t_end."""
+        while self._heap and self._heap[0][0] <= t_end + 1e-12:
+            t, _, kind, payload, owner = heapq.heappop(self._heap)
+            self.now = max(self.now, t)
+            self.events += 1
+            owner._handle(kind, payload)
+        self.now = max(self.now, t_end)
+
+    def drain(self):
+        """Run the loop dry — every admitted request completes."""
+        while self._heap:
+            self.run_until(self._heap[0][0])
 
 
 class RuntimeStage:
@@ -103,18 +150,21 @@ class RuntimeStage:
 
 class ServingRuntime:
     def __init__(self, stages: list[RuntimeStage], *,
-                 telemetry: Telemetry | None = None, pipe: Pipeline | None = None):
+                 telemetry: Telemetry | None = None, pipe: Pipeline | None = None,
+                 loop: EventLoop | None = None):
         self.stages = stages
         self.telemetry = telemetry or Telemetry()
-        self.now = 0.0
+        self._loop = loop if loop is not None else EventLoop()
         self.completed: list[Request] = []
         self.in_system = 0            # arrived, not yet fully served
         self.switch_count = 0
         self.migration_count = 0      # replicas moved across nodes by reconfigs
         self.last_migrations = 0
         self.stale_timers_dropped = 0  # superseded timer events ignored
-        self._heap: list[tuple[float, int, str, object]] = []
-        self._seq = itertools.count()
+        # admission hook (multi-tenant load shedding): ``admission(runtime,
+        # request) -> bool`` decides at arrival time; a rejected request is
+        # recorded as offered + shed and never enters a queue
+        self.admission = None
         # cluster topology: placement charges replica-seconds per node and
         # adjacent stages on different primary nodes pay a transfer hop
         self.pipe = pipe
@@ -128,15 +178,22 @@ class ServingRuntime:
         if pipe is not None:
             self._install_placement(placement_for(pipe, self.config))
 
+    @property
+    def now(self) -> float:
+        """The virtual clock — owned by the (possibly shared) event loop."""
+        return self._loop.now
+
     # ----------------------------------------------------------- set-up --
 
     @classmethod
     def from_pipeline(cls, pipe: Pipeline, *, cfg: Config | None = None,
                       max_wait: float = DEFAULT_MAX_WAIT, seq_len: int = 32,
-                      executors: list | None = None) -> ServingRuntime:
+                      executors: list | None = None,
+                      loop: EventLoop | None = None) -> ServingRuntime:
         """Stages mirror ``pipe``'s tasks; initial knobs from ``cfg``
         (default: cheapest variant, 1 replica, batch 1). Replicas are placed
-        on ``pipe``'s cluster topology by the shared first-fit scheduler."""
+        on ``pipe``'s cluster topology by the shared first-fit scheduler.
+        ``loop`` shares an event loop with other runtimes (fleet serving)."""
         if cfg is None:
             n = pipe.n_tasks
             cfg = Config(z=(0,) * n, f=(1,) * n, b=(1,) * n)
@@ -147,7 +204,7 @@ class ServingRuntime:
                          executor=executors[i] if executors else None)
             for i, task in enumerate(pipe.tasks)
         ]
-        return cls(stages, pipe=pipe)
+        return cls(stages, pipe=pipe, loop=loop)
 
     def _install_placement(self, pl):
         """Point every stage's replica pool at its assigned nodes and roll
@@ -232,33 +289,38 @@ class ServingRuntime:
     # -------------------------------------------------------- event loop --
 
     def _push(self, t: float, kind: str, payload):
-        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+        self._loop.push(t, self, kind, payload)
 
     def run_until(self, t_end: float):
-        """Process all events with time <= t_end; clock lands on t_end."""
-        while self._heap and self._heap[0][0] <= t_end + 1e-12:
-            t, _, kind, payload = heapq.heappop(self._heap)
-            self.now = max(self.now, t)
-            if kind == "arrival":
-                self._on_arrival(payload)
-            elif kind == "complete":
-                self._on_complete(*payload)
-            elif kind == "timer":
-                self._on_timer(*payload)
-            elif kind == "xfer":
-                self._on_xfer(*payload)
-        self.now = max(self.now, t_end)
+        """Process all events with time <= t_end; clock lands on t_end.
+        On a shared loop this advances *every* runtime on it — the fleet's
+        tenants march through one interleaved virtual timeline."""
+        self._loop.run_until(t_end)
 
     def drain(self):
         """Run the loop dry — every admitted request completes."""
-        while self._heap:
-            self.run_until(self._heap[0][0])
+        self._loop.drain()
 
     # ---------------------------------------------------------- handlers --
 
+    def _handle(self, kind: str, payload):
+        """Event dispatch — called by the (possibly shared) event loop."""
+        if kind == "arrival":
+            self._on_arrival(payload)
+        elif kind == "complete":
+            self._on_complete(*payload)
+        elif kind == "timer":
+            self._on_timer(*payload)
+        elif kind == "xfer":
+            self._on_xfer(*payload)
+
     def _on_arrival(self, req: Request):
-        self.in_system += 1
         self.telemetry.record_arrival(self.now)
+        if self.admission is not None and not self.admission(self, req):
+            # shed: counted as offered load, never queued, never completes
+            self.telemetry.record_shed(self.now)
+            return
+        self.in_system += 1
         self.stages[0].batcher.put(req, self.now)
         self._poke(0)
 

@@ -57,6 +57,10 @@ class Telemetry:
         self._arrival_times: list[float] = []
         self._finish_times: list[float] = []
         self._latencies: list[float] = []
+        # arrivals rejected by admission control (multi-tenant overload):
+        # shed requests count as *offered* load (they are recorded as
+        # arrivals) but never enter a queue and never complete
+        self._shed_times: list[float] = []
 
     # -------------------------------------------------------- recording --
 
@@ -76,6 +80,12 @@ class Telemetry:
         else:
             self._finish_times.append(finish)
             self._latencies.append(finish - arrival)
+
+    def record_shed(self, t: float):
+        if self._shed_times and t < self._shed_times[-1]:
+            insort(self._shed_times, t)
+        else:
+            self._shed_times.append(t)
 
     def record_batch(self, stage: int, t: float, size: int, service: float,
                      queue_depth: int):
@@ -102,6 +112,14 @@ class Telemetry:
     def arrived_in(self, t0: float, t1: float) -> int:
         return (bisect_left(self._arrival_times, t1)
                 - bisect_left(self._arrival_times, t0))
+
+    def shed_in(self, t0: float, t1: float) -> int:
+        return (bisect_left(self._shed_times, t1)
+                - bisect_left(self._shed_times, t0))
+
+    @property
+    def shed(self) -> int:
+        return len(self._shed_times)
 
     def load_history(self, now: float, history: int = 120) -> np.ndarray:
         """Per-second arrival counts over the last ``history`` seconds —
@@ -135,9 +153,12 @@ class Telemetry:
         lat = self.latencies()
         pcts = {k: (None if np.isnan(v) else v)
                 for k, v in self.latency_percentiles().items()}
+        arrived = sum(self.arrival_counts.values())
         out = {
             "served": len(self.completions),
-            "arrived": sum(self.arrival_counts.values()),
+            "arrived": arrived,
+            "shed": self.shed,
+            "shed_rate": self.shed / max(arrived, 1),
             "throughput_rps": len(self.completions) / max(now, 1e-9),
             "latency_mean_s": float(lat.mean()) if lat.size else None,
             **pcts,
