@@ -14,6 +14,11 @@ import pickle
 
 import numpy as np
 
+# the ONE timing loop (min-of-k, warmup + block_until_ready) every benchmark
+# shares with the stage executor — canonical home is repro.timing so src-side
+# code can use it without importing benchmarks
+from repro.timing import Timing, time_fn, time_interleaved  # noqa: F401
+
 RESULTS_DIR = os.path.join("experiments", "results")
 POLICY_CACHE = os.path.join("experiments", "opd_policy.pkl")
 

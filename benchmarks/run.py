@@ -23,7 +23,7 @@ def main() -> None:
         default=None,
         help="comma-separated subset: "
         "fig3,fig45,fig6,fig7,roofline,runtime,train,"
-        "runtime_train,telemetry,fleet",
+        "runtime_train,telemetry,fleet,calibration",
     )
     args = bench_args(parser=ap)
 
@@ -36,6 +36,7 @@ def main() -> None:
         roofline,
         runtime_throughput,
         runtime_train_throughput,
+        stage_calibration,
         telemetry_queries,
         train_throughput,
     )
@@ -50,6 +51,7 @@ def main() -> None:
         "runtime_train": runtime_train_throughput.run,
         "telemetry": telemetry_queries.run,
         "fleet": fleet_throughput.run,
+        "calibration": stage_calibration.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     print("benchmark,metric,value,reference")

@@ -13,12 +13,11 @@ perf baseline the CI ``bench-smoke`` job gates against (fail below 0.5x).
 from __future__ import annotations
 
 import platform
-import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import save_results
+from benchmarks.common import save_results, time_fn, time_interleaved
 from repro import api
 from repro.cluster import RuntimeEnv
 from repro.core import OPDTrainer, PPOConfig
@@ -28,12 +27,6 @@ from repro.core import vecenv
 PIPELINE = "serve3-hetero"
 ARRIVALS = ("bursty", 25.0)
 ENV_COUNTS = (1, 8, 32)
-
-
-def _timed(fn) -> float:
-    t0 = time.perf_counter()
-    fn()
-    return time.perf_counter() - t0
 
 
 def run(quick: bool = False):
@@ -78,9 +71,11 @@ def run(quick: bool = False):
         )
         keys = jax.vmap(lambda s: jax.random.fold_in(base_key, s))(np.arange(n_envs))
         args = (tr.params, tables, eps, keys)
-        t0 = time.perf_counter()
-        jax.block_until_ready(rv.vec_rollout(*args, n_steps=n_steps, weights=weights))
-        compile_s[n_envs] = time.perf_counter() - t0
+        compile_s[n_envs] = time_fn(
+            lambda args=args: rv.vec_rollout(*args, n_steps=n_steps,
+                                             weights=weights),
+            reps=1, warmup=0,
+        ).best
 
         def one_pass(args=args):
             for _ in range(vec_reps):
@@ -88,16 +83,17 @@ def run(quick: bool = False):
             jax.block_until_ready(out)
         vec_pass[n_envs] = one_pass
 
-    # legacy and vectorized passes interleave so a host-level slowdown
-    # (shared CPU, frequency drift) lands on both sides of the speedup
-    # ratio instead of whichever happened to run while it lasted
-    legacy_walls, vec_walls = [], {n: [] for n in ENV_COUNTS}
-    for _ in range(passes):
-        legacy_walls.append(_timed(legacy_pass))
-        for n_envs in ENV_COUNTS:
-            vec_walls[n_envs].append(_timed(vec_pass[n_envs]))
+    # legacy and vectorized passes interleave (time_interleaved) so a
+    # host-level slowdown (shared CPU, frequency drift) lands on both sides
+    # of the speedup ratio instead of whichever happened to run while it
+    # lasted; warmup already happened above, outside the timed region
+    timings = time_interleaved(
+        [legacy_pass] + [vec_pass[n] for n in ENV_COUNTS],
+        reps=passes, warmup=0,
+    )
+    legacy_t, vec_t = timings[0], dict(zip(ENV_COUNTS, timings[1:]))
 
-    wall = min(legacy_walls)
+    wall = legacy_t.best
     legacy = {
         "episodes": legacy_eps,
         "wall_s": wall,
@@ -106,7 +102,7 @@ def run(quick: bool = False):
     }
     vec = {}
     for n_envs in ENV_COUNTS:
-        wall = min(vec_walls[n_envs])
+        wall = vec_t[n_envs].best
         vec[str(n_envs)] = {
             "episodes": n_envs * vec_reps,
             "wall_s": wall,

@@ -12,11 +12,9 @@ bounded (a linear regression would blow it up by ~record-count ratio).
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from benchmarks.common import save_results
+from benchmarks.common import save_results, time_fn
 from repro.serving.telemetry import Telemetry
 
 GROWTH = 16              # large run has GROWTH x the records of the small
@@ -39,16 +37,18 @@ def _fill(n_records: int, rate: float = 20.0) -> Telemetry:
 
 def _time_queries(tel: Telemetry, horizon: float, *, repeats: int = 200) -> float:
     """Mean wall seconds of one interval's query bundle (what
-    ``RuntimeEnv.step`` issues every 10 s decision)."""
-    t0 = time.perf_counter()
-    for k in range(repeats):
-        lo = (k % 10) * horizon / 10.0
-        hi = lo + 10.0
-        tel.completed_in(lo, hi)
-        tel.arrived_in(lo, hi)
-        tel.latencies(lo, hi)
-        tel.load_history(hi, 120)
-    return (time.perf_counter() - t0) / repeats
+    ``RuntimeEnv.step`` issues every 10 s decision) — min-of-k over the
+    whole ``repeats``-bundle loop via the shared timing helper."""
+    def bundle():
+        for k in range(repeats):
+            lo = (k % 10) * horizon / 10.0
+            hi = lo + 10.0
+            tel.completed_in(lo, hi)
+            tel.arrived_in(lo, hi)
+            tel.latencies(lo, hi)
+            tel.load_history(hi, 120)
+
+    return time_fn(bundle, reps=3, warmup=1).best / repeats
 
 
 def run(quick: bool = False):

@@ -1,4 +1,4 @@
-"""The reprolint rule catalogue (RPL001–RPL005).
+"""The reprolint rule catalogue (RPL001–RPL006).
 
 Each rule mechanises one convention this codebase learned the hard way —
 see ``docs/ANALYSIS.md`` for the full catalogue with rationale and fix
@@ -10,6 +10,7 @@ rule:
   RPL003  raw version-sensitive ``jax.*`` APIs that bypass ``repro.compat``
   RPL004  spec-safety: ``*Spec`` dataclasses frozen + JSON-round-trip safe
   RPL005  CPU loop-lowering anti-patterns (the PR 5 event-loop lessons)
+  RPL006  device→host syncs inside a benchmark's timed region
 """
 from __future__ import annotations
 
@@ -20,9 +21,10 @@ from repro.analysis.framework import (ERROR, WARNING, Rule, SourceModule,
                                       register)
 
 # Modules whose traced code must stay host-free: the jitted twins, the
-# policy/PPO jit surface, and everything models/kernels under jit.
+# policy/PPO jit surface, the measured stage executor, and everything
+# models/kernels under jit.
 JIT_PURE_FILES = ("core/vecenv.py", "core/runtime_vec.py", "core/ppo.py",
-                  "core/policy.py")
+                  "core/policy.py", "cluster/executor.py")
 JIT_PURE_DIRS = ("/train/", "/nn/", "/kernels/")
 
 # jax.random callables that *create or derive* keys rather than consume one.
@@ -539,3 +541,115 @@ class CpuLoopLowering(Rule):
                 continue
             return True
         return False
+
+
+# --------------------------------------------------------------- RPL006 --
+
+# Calls that force a device→host sync (and its transfer) onto the clock.
+_SYNC_CALLS = frozenset({"numpy.asarray", "numpy.array", "jax.device_get"})
+# The shared min-of-k helpers; functions handed to them by name are timed.
+_TIMING_HELPERS = ("time_fn", "time_interleaved")
+
+
+@register
+class TimedRegionSync(Rule):
+    """A device→host sync (``.item()``, ``np.asarray`` on a device value,
+    ``jax.device_get``) inside a benchmark's timed region bills the
+    transfer and the forced pipeline flush to the thing being measured.
+    Syncs belong outside the clock; inside it, only ``jax.
+    block_until_ready`` (what ``repro.timing`` already does) may wait.
+
+    Timed regions are (a) statements between ``t0 = time.perf_counter()``
+    and the first statement that reads ``t0`` back, and (b) bodies of
+    functions handed by name to ``time_fn`` / ``time_interleaved``."""
+    code = "RPL006"
+    name = "sync-in-timed-region"
+    severity = ERROR
+    description = "device→host sync inside a benchmark's timed region"
+
+    def check(self, mod: SourceModule):
+        if "benchmarks/" not in mod.path:
+            return
+        timed_fns = self._handed_to_timers(mod)
+        for body in self._stmt_lists(mod.tree):
+            yield from self._perf_counter_regions(mod, body)
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and node.name in timed_fns):
+                for stmt in node.body:
+                    yield from self._syncs(mod, stmt)
+
+    @staticmethod
+    def _stmt_lists(tree: ast.Module):
+        """Every list of statements in the module (module body, function
+        bodies, loop/branch/with bodies) — perf_counter windows live
+        within one such list."""
+        yield tree.body
+        for node in ast.walk(tree):
+            for attr in ("body", "orelse", "finalbody"):
+                block = getattr(node, attr, None)
+                if (block and isinstance(block, list)
+                        and not isinstance(node, ast.Module)
+                        and isinstance(block[0], ast.stmt)):
+                    yield block
+
+    def _perf_counter_regions(self, mod: SourceModule, body):
+        """Flag syncs between ``t = time.perf_counter()`` and the first
+        statement reading ``t`` (the stop-the-clock statement)."""
+        i = 0
+        while i < len(body):
+            started = self._perf_start(mod, body[i])
+            i += 1
+            if not started:
+                continue
+            while i < len(body) and not self._reads(mod, body[i], started):
+                yield from self._syncs(mod, body[i])
+                i += 1
+
+    @staticmethod
+    def _perf_start(mod: SourceModule, stmt) -> str | None:
+        if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)
+                and isinstance(stmt.value, ast.Call)):
+            callee = mod.resolve(stmt.value.func)
+            if callee in ("time.perf_counter", "time.monotonic", "time.time"):
+                return stmt.targets[0].id
+        return None
+
+    @staticmethod
+    def _reads(mod: SourceModule, stmt, name: str) -> bool:
+        return any(isinstance(n, ast.Name) and n.id == name
+                   for n in ast.walk(stmt))
+
+    def _handed_to_timers(self, mod: SourceModule) -> set[str]:
+        """Names of module functions passed (anywhere in the argument
+        expressions) to the shared timing helpers."""
+        defined = {n.name for n in ast.walk(mod.tree)
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        handed: set[str] = set()
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = mod.resolve(node.func) or ""
+            if callee.rsplit(".", 1)[-1] not in _TIMING_HELPERS:
+                continue
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Name) and sub.id in defined:
+                        handed.add(sub.id)
+        return handed
+
+    def _syncs(self, mod: SourceModule, stmt):
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args):
+                yield (node, ".item() inside a timed region forces a "
+                       "device→host sync onto the clock; hoist it out of "
+                       "the timed window")
+            callee = mod.resolve(node.func)
+            if callee in _SYNC_CALLS:
+                yield (node, f"{callee}() inside a timed region copies "
+                       f"device values to host on the clock; move the "
+                       f"conversion outside the timed window")

@@ -81,7 +81,15 @@ class PipelineSpec:
     everything ``perf_model.make_pipeline`` needs, as data. ``cluster``
     (None = the homogeneous scalar pool of capacity ``w_max``) selects the
     cluster topology stage replicas are placed on; when set, the pipeline's
-    W_max is the topology's total capacity."""
+    W_max is the topology's total capacity.
+
+    ``perf_source`` selects where variant latency coefficients come from:
+    ``"analytic"`` (the default — pure ``perf_model`` arithmetic, bit-for-bit
+    what every pre-calibration run used) or ``"calibrated"``, which rebinds
+    the built pipeline onto measured ``(alpha, beta)`` from the calibration
+    table named by ``calibration`` (a ``cluster.calibration.register_table``
+    name or JSON path; None = the committed ``stage_calibration`` baseline).
+    """
     name: str
     stages: tuple[tuple[str, ...], ...]      # arch names per stage
     quants: tuple[str, ...] = DEFAULT_QUANTS
@@ -89,16 +97,26 @@ class PipelineSpec:
     b_max: int = 32
     w_max: float = 64.0
     cluster: ClusterSpec | None = None
+    perf_source: str = "analytic"            # "analytic" | "calibrated"
+    calibration: str | None = None           # table name/path (calibrated)
 
     def build(self) -> Pipeline:
         from repro.cluster.perf_model import make_pipeline
         from repro.configs import ARCHS
         topology = self.cluster.build() if self.cluster else None
         w_max = self.cluster.total_capacity if self.cluster else self.w_max
-        return make_pipeline([[ARCHS[n] for n in names] for names in self.stages],
+        pipe = make_pipeline([[ARCHS[n] for n in names] for names in self.stages],
                              name=self.name, quants=self.quants,
                              f_max=self.f_max, b_max=self.b_max,
                              w_max=w_max, topology=topology)
+        if self.perf_source == "analytic":
+            return pipe
+        if self.perf_source == "calibrated":
+            from repro.cluster.calibration import (calibrate_pipeline,
+                                                   resolve_table)
+            return calibrate_pipeline(pipe, resolve_table(self.calibration))
+        raise ValueError(f"unknown perf_source {self.perf_source!r} "
+                         "(one of: analytic, calibrated)")
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -111,7 +129,9 @@ class PipelineSpec:
                    quants=tuple(d.get("quants", DEFAULT_QUANTS)),
                    f_max=int(d.get("f_max", 8)), b_max=int(d.get("b_max", 32)),
                    w_max=float(d.get("w_max", 64.0)),
-                   cluster=ClusterSpec.from_dict(cluster) if cluster else None)
+                   cluster=ClusterSpec.from_dict(cluster) if cluster else None,
+                   perf_source=str(d.get("perf_source", "analytic")),
+                   calibration=d.get("calibration"))
 
 
 @dataclass(frozen=True)

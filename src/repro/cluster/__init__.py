@@ -5,3 +5,6 @@ from repro.cluster.perf_model import variant_from_arch, default_pipeline, make_p
 from repro.cluster.env import (PipelineEnv, RuntimeEnv, ADAPTATION_INTERVAL,
                                COLD_START_FRACTION)
 from repro.cluster.monitor import Monitor
+from repro.cluster.calibration import (CalibrationTable, calibrate_pipeline,
+                                       apply_to_cluster, fit_alpha_beta,
+                                       register_table, resolve_table)

@@ -1,0 +1,63 @@
+"""Min-of-k wall-clock timing for device work — the ONE timing loop every
+benchmark and the stage executor share.
+
+Protocol (the CPU-microbenchmark standard):
+  * ``warmup`` untimed calls first, so jit compilation and first-touch
+    allocation never land inside a timed region;
+  * each timed pass calls the function and ``jax.block_until_ready``s the
+    result, so asynchronous dispatch cannot end the clock early;
+  * ``reps`` timed passes, and the *minimum* is the figure of merit — on a
+    shared host the min is the undisturbed run, the mean is the noise.
+
+``time_interleaved`` times several functions in interleaved rounds
+(fn_a, fn_b, fn_a, fn_b, ...) so a host-level slowdown lands on every
+side of a speedup ratio instead of whichever ran while it lasted.
+
+Device→host syncs (``.item()``, ``np.asarray`` on device values) belong
+OUTSIDE the timed callables — reprolint RPL006 enforces this for the
+benchmark scripts.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+
+
+@dataclass(frozen=True)
+class Timing:
+    """One function's timing: ``best`` = min seconds per pass across reps."""
+    best: float
+    times: tuple[float, ...]
+
+    @property
+    def mean(self) -> float:
+        return sum(self.times) / len(self.times)
+
+
+def time_interleaved(fns, *, reps: int = 3, warmup: int = 1) -> list[Timing]:
+    """Time each callable in ``fns`` over ``reps`` interleaved rounds.
+
+    Each call's return value is ``block_until_ready``-ed inside its timed
+    window (a no-op for host-only values). Returns one ``Timing`` per fn,
+    in order.
+    """
+    fns = list(fns)
+    if reps < 1:
+        raise ValueError("reps must be >= 1")
+    for _ in range(warmup):
+        for fn in fns:
+            jax.block_until_ready(fn())
+    walls: list[list[float]] = [[] for _ in fns]
+    for _ in range(reps):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            walls[i].append(time.perf_counter() - t0)
+    return [Timing(best=min(w), times=tuple(w)) for w in walls]
+
+
+def time_fn(fn, *, reps: int = 3, warmup: int = 1) -> Timing:
+    """Min-of-``reps`` timing of one callable (see module docstring)."""
+    return time_interleaved([fn], reps=reps, warmup=warmup)[0]

@@ -1,4 +1,4 @@
-"""Tests for repro.analysis: every reprolint rule (RPL001-RPL005) on seeded
+"""Tests for repro.analysis: every reprolint rule (RPL001-RPL006) on seeded
 caught/clean fixture pairs, suppression handling, the CLI gate on the repo's
 own tree, and the checkify sanitizer (repro.analysis.sanitize) wired around
 the jitted twins — a sanitized episode must still match the reference env."""
@@ -35,7 +35,8 @@ def codes(src, path="fixture.py"):
 
 class TestRuleCatalogue:
     def test_all_rules_registered(self):
-        assert set(RULES) == {"RPL001", "RPL002", "RPL003", "RPL004", "RPL005"}
+        assert set(RULES) == {"RPL001", "RPL002", "RPL003", "RPL004",
+                              "RPL005", "RPL006"}
 
 
 class TestKeyReuse:
@@ -242,6 +243,67 @@ class TestCpuLoopLowering:
     def test_out_of_scope_module_not_flagged(self):
         src = "def f(x, i, v):\n    return x.at[i].set(v)\n"
         assert "RPL005" not in codes(src, "src/repro/serving/runtime.py")
+
+
+class TestTimedRegionSync:
+    BENCH = "benchmarks/fixture.py"
+
+    def test_catches_sync_in_perf_counter_window(self):
+        src = (
+            "import time\n"
+            "import numpy as np\n"
+            "def run(step, x):\n"
+            "    t0 = time.perf_counter()\n"
+            "    out = step(x)\n"
+            "    v = out.item()\n"
+            "    host = np.asarray(out)\n"
+            "    wall = time.perf_counter() - t0\n"
+            "    return wall, v, host\n"
+        )
+        found = [f for f in analyze_source(src, self.BENCH)
+                 if f.rule == "RPL006"]
+        assert len(found) == 2 and found[0].severity == "error"
+
+    def test_catches_sync_in_fn_handed_to_timer(self):
+        src = (
+            "from benchmarks.common import time_fn\n"
+            "def run(step, x):\n"
+            "    def one_pass():\n"
+            "        return step(x).item()\n"
+            "    return time_fn(one_pass, reps=3).best\n"
+        )
+        found = [f for f in analyze_source(src, self.BENCH)
+                 if f.rule == "RPL006"]
+        assert found and ".item()" in found[0].message
+
+    def test_clean_sync_outside_window(self):
+        # syncs after the clock stops (the stop statement reads t0) are fine
+        src = (
+            "import time\n"
+            "import numpy as np\n"
+            "def run(step, x):\n"
+            "    t0 = time.perf_counter()\n"
+            "    out = step(x)\n"
+            "    wall = time.perf_counter() - t0\n"
+            "    return wall, float(np.asarray(out).mean())\n"
+        )
+        assert "RPL006" not in codes(src, self.BENCH)
+
+    def test_only_benchmark_paths_in_scope(self):
+        src = (
+            "import time\n"
+            "def run(step, x):\n"
+            "    t0 = time.perf_counter()\n"
+            "    v = step(x).item()\n"
+            "    return time.perf_counter() - t0, v\n"
+        )
+        assert "RPL006" in codes(src, self.BENCH)
+        assert "RPL006" not in codes(src, "src/repro/launch/dryrun.py")
+
+    def test_executor_module_is_jit_pure_scope(self):
+        # the measured stage executor joined RPL002's jit-pure set
+        src = "import numpy as np\n"
+        assert "RPL002" in codes(src, "src/repro/cluster/executor.py")
 
 
 class TestSuppression:

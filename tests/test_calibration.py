@@ -1,0 +1,289 @@
+"""Tests for the measured stage-execution layer: the calibration fit and
+table round-trip, the executable cache (second lookup compiles nothing),
+the ``perf_source`` PipelineSpec switch (bit-for-bit analytic default,
+calibrated tables propagating through ``pipeline_metrics`` and the vecenv
+tables), measured cluster speeds, the shared timing helper, and the
+``--max-ratio`` benchmark gate."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.cluster.calibration import (CalibrationTable, apply_to_cluster,
+                                       calibrate_pipeline, fit_alpha_beta,
+                                       mean_relative_error, predict,
+                                       register_table, resolve_table)
+from repro.core.mdp import Config, pipeline_metrics
+from repro.timing import time_fn, time_interleaved
+
+
+class TestFit:
+    def test_round_trip_recovers_alpha_beta(self):
+        alpha, beta = 3.5e-3, 2.4e-4
+        b = np.array([1, 2, 4, 8, 16], dtype=float)
+        rng = np.random.default_rng(0)
+        y = alpha + beta * b + rng.normal(0.0, 1e-6, size=b.size)
+        a_fit, b_fit = fit_alpha_beta(b, y)
+        assert a_fit == pytest.approx(alpha, rel=1e-2)
+        assert b_fit == pytest.approx(beta, rel=1e-2)
+        assert mean_relative_error(predict(a_fit, b_fit, b), y) < 1e-3
+
+    def test_exact_fit_no_noise(self):
+        a, b = fit_alpha_beta([2, 4, 8], [0.01 + 0.002 * x for x in (2, 4, 8)])
+        assert a == pytest.approx(0.01, abs=1e-12)
+        assert b == pytest.approx(0.002, abs=1e-12)
+
+    def test_clamped_to_physical_domain(self):
+        # decreasing measured curve -> slope clamps to 0, never negative
+        _, beta = fit_alpha_beta([1, 2, 4], [0.03, 0.02, 0.01])
+        assert beta == 0.0
+
+    def test_single_point_is_flat(self):
+        assert fit_alpha_beta([4], [0.02]) == (0.02, 0.0)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            fit_alpha_beta([1, 2], [0.1])
+
+
+class TestCalibrationTable:
+    TABLE = CalibrationTable(
+        device_class="cpu2",
+        variants={"llama3.2-1b:bf16": (0.002, 0.0003),
+                  "whisper-small:bf16": (0.004, 0.0001)},
+        speeds={"cpu1": 1.0, "cpu2": 1.6},
+        meta={"mode": "quick"})
+
+    def test_json_round_trip(self):
+        d = json.loads(json.dumps(self.TABLE.to_dict()))
+        assert CalibrationTable.from_dict(d) == self.TABLE
+
+    def test_load_accepts_benchmark_payload(self, tmp_path):
+        # stage_calibration emits {"table": {...}, ...}; load unwraps it
+        p = tmp_path / "stage_calibration.json"
+        p.write_text(json.dumps({"fit_mre_mean": 0.1,
+                                 "table": self.TABLE.to_dict()}))
+        assert CalibrationTable.load(p) == self.TABLE
+
+    def test_resolve_by_name_and_path(self, tmp_path):
+        register_table("test-table", self.TABLE)
+        assert resolve_table("test-table") is self.TABLE
+        p = tmp_path / "t.json"
+        self.TABLE.save(p)
+        assert resolve_table(str(p)) == self.TABLE
+        with pytest.raises(KeyError):
+            resolve_table("no-such-table")
+
+    def test_from_timings_rejects_mixed_device_classes(self):
+        from repro.cluster.executor import StageTiming
+        mk = lambda cls: StageTiming(  # noqa: E731
+            arch="a", batch=2, quant="bf16", backend="reference",
+            device_class=cls, latency_s=0.01, compile_s=0.0,
+            cache_hit=False, flops=1.0, bytes=1.0)
+        with pytest.raises(ValueError):
+            CalibrationTable.from_timings([mk("cpu1"), mk("cpu2")])
+
+
+class TestPerfSourceSwitch:
+    def spec(self, **kw):
+        return api.PipelineSpec(
+            name="t", stages=(("llama3.2-1b",), ("whisper-small",)),
+            quants=("bf16", "int8"), **kw)
+
+    def test_spec_round_trip(self):
+        spec = self.spec(perf_source="calibrated", calibration="some-table")
+        again = api.PipelineSpec.from_dict(
+            json.loads(json.dumps(spec.to_dict())))
+        assert again == spec
+        assert again.perf_source == "calibrated"
+        assert again.calibration == "some-table"
+
+    def test_pre_calibration_dicts_default_to_analytic(self):
+        # JSON written before this field existed must keep loading
+        d = self.spec().to_dict()
+        del d["perf_source"], d["calibration"]
+        spec = api.PipelineSpec.from_dict(d)
+        assert spec.perf_source == "analytic"
+        assert spec.calibration is None
+
+    def test_analytic_default_bit_for_bit(self):
+        # perf_source="analytic" must produce exactly the pre-PR pipeline:
+        # same variants, same (alpha, beta), so every pinned reward holds
+        from repro.cluster.perf_model import make_pipeline
+        from repro.configs import ARCHS
+        spec = self.spec()
+        built = spec.build()
+        expected = make_pipeline(
+            [[ARCHS[n] for n in names] for names in spec.stages],
+            name=spec.name, quants=spec.quants, f_max=spec.f_max,
+            b_max=spec.b_max, w_max=spec.w_max)
+        assert built == expected
+
+    def test_calibrated_build_rebinds_measured_variants(self):
+        table = register_table("test-cal", CalibrationTable(
+            device_class="cpu1",
+            variants={"llama3.2-1b:bf16": (0.123, 0.456)}))
+        spec = self.spec(perf_source="calibrated", calibration="test-cal")
+        pipe = spec.build()
+        by_name = {v.name: v for t in pipe.tasks for v in t.variants}
+        assert by_name["llama3.2-1b:bf16"].alpha == 0.123
+        assert by_name["llama3.2-1b:bf16"].beta == 0.456
+        # uncovered variants keep their analytic coefficients
+        analytic = {v.name: v for t in self.spec().build().tasks
+                    for v in t.variants}
+        assert by_name["whisper-small:int8"] == analytic["whisper-small:int8"]
+        # everything but (alpha, beta) is untouched on the calibrated one
+        assert by_name["llama3.2-1b:bf16"].accuracy == \
+            analytic["llama3.2-1b:bf16"].accuracy
+        assert table.variants  # registered table is what build consumed
+
+    def test_unknown_perf_source_raises(self):
+        with pytest.raises(ValueError, match="perf_source"):
+            self.spec(perf_source="measured").build()
+
+    def test_calibration_propagates_through_pipeline_metrics(self):
+        spec = self.spec()
+        pipe = spec.build()
+        slow = CalibrationTable(
+            device_class="cpu1",
+            variants={v.name: (v.alpha * 10.0, v.beta * 10.0)
+                      for t in pipe.tasks for v in t.variants})
+        cal = calibrate_pipeline(pipe, slow)
+        cfg = Config(z=(0, 0), f=(1, 1), b=(4, 4))
+        _, _, _, lat0, _, cap0 = pipeline_metrics(pipe, cfg, 10.0)
+        _, _, _, lat1, _, cap1 = pipeline_metrics(cal, cfg, 10.0)
+        # capacity = f*b/latency(b): 10x slower coefficients -> 1/10 capacity
+        assert cap1 == pytest.approx(cap0 / 10.0)
+        assert lat1 > lat0
+
+    def test_calibration_propagates_to_vecenv_tables(self):
+        from repro.core import vecenv
+        spec = self.spec()
+        pipe = spec.build()
+        table = CalibrationTable(
+            device_class="cpu1",
+            variants={"llama3.2-1b:bf16": (0.5, 0.25)})
+        t0 = vecenv.tables_from_pipeline(pipe)
+        t1 = vecenv.tables_from_pipeline(calibrate_pipeline(pipe, table))
+        assert float(np.asarray(t1.alpha).max()) == 0.5
+        assert not np.array_equal(np.asarray(t0.alpha),
+                                  np.asarray(t1.alpha))
+
+
+class TestApplyToCluster:
+    def test_speeds_replaced_per_class_map(self):
+        cluster = api.get_cluster("edge-hetero-3")
+        table = CalibrationTable(device_class="cpu2", variants={},
+                                 speeds={"cpu1": 1.0, "cpu2": 1.7})
+        cal = apply_to_cluster(cluster, table,
+                               {"server": "cpu2", "device": "cpu1"})
+        by_class = {n.device_class: n.speed for n in cal.nodes}
+        assert by_class["server"] == 1.7
+        assert by_class["device"] == 1.0
+        # unmapped classes keep their declared speed
+        declared = {n.device_class: n.speed for n in cluster.nodes}
+        assert by_class["edge-box"] == declared["edge-box"]
+
+
+class TestExecutableCache:
+    def test_second_lookup_compiles_nothing(self):
+        from repro import compat
+        from repro.cluster.executor import StageExecutor
+        ex = StageExecutor(compat.make_mesh((1, 1), ("data", "model")),
+                           seq_len=8)
+        t1 = ex.measure("whisper-small", 2, reps=1, warmup=0)
+        assert not t1.cache_hit and t1.compile_s > 0.0
+        entry1 = ex.cache.entries[ex.key_for("whisper-small", 2)]
+        t2 = ex.measure("whisper-small", 2, reps=1, warmup=0)
+        assert t2.cache_hit and t2.compile_s == 0.0
+        # the very same executable object served the repeat lookup
+        assert ex.cache.entries[ex.key_for("whisper-small", 2)] is entry1
+        assert (ex.cache.hits, ex.cache.misses) == (1, 1)
+        assert ex.cache.hit_rate() == 0.5
+        # a different batch is a different executable
+        t3 = ex.measure("whisper-small", 4, reps=1, warmup=0)
+        assert not t3.cache_hit
+        assert t1.latency_s > 0.0 and t1.flops > 0.0 and t1.bytes > 0.0
+
+    def test_quantized_params_change_measured_executable_inputs(self):
+        import jax.numpy as jnp
+        from repro.cluster.executor import quantize_params
+        params = {"w": jnp.linspace(-1.0, 1.0, 16, dtype=jnp.float32),
+                  "idx": jnp.arange(4)}
+        q8 = quantize_params(params, "int8")
+        assert q8["w"].dtype == jnp.bfloat16
+        assert q8["idx"].dtype == params["idx"].dtype
+        # int4 has 16 levels: at most 16 distinct values survive
+        q4 = quantize_params(params, "int4")
+        assert len(set(np.asarray(q4["w"], dtype=np.float32))) <= 16
+        bf = quantize_params(params, "bf16")
+        assert bf["w"].dtype == jnp.bfloat16
+
+
+class TestTimingHelper:
+    def test_min_of_k_and_mean(self):
+        calls = []
+        t = time_fn(lambda: calls.append(1), reps=3, warmup=2)
+        assert len(calls) == 5          # warmup + reps, all executed
+        assert len(t.times) == 3
+        assert t.best == min(t.times) <= t.mean
+
+    def test_interleaved_orders_and_reps(self):
+        order = []
+        fns = [lambda: order.append("a"), lambda: order.append("b")]
+        ts = time_interleaved(fns, reps=2, warmup=1)
+        assert order == ["a", "b", "a", "b", "a", "b"]
+        assert all(len(t.times) == 2 for t in ts)
+
+    def test_reps_validated(self):
+        with pytest.raises(ValueError):
+            time_fn(lambda: None, reps=0)
+
+
+class TestGateMaxRatio:
+    def run_gate(self, tmp_path, args, cur, base):
+        from benchmarks.gate import main
+        c = tmp_path / "cur.json"
+        b = tmp_path / "base.json"
+        c.write_text(json.dumps(cur))
+        b.write_text(json.dumps(base))
+        return main([str(c), "--baseline", str(b)] + args)
+
+    def test_max_ratio_pass_and_fail(self, tmp_path):
+        base = {"mre": 0.10}
+        ok = self.run_gate(tmp_path, ["--metric", "mre", "--max-ratio", "2.0"],
+                           {"mre": 0.15}, base)
+        bad = self.run_gate(tmp_path, ["--metric", "mre", "--max-ratio", "2.0"],
+                            {"mre": 0.25}, base)
+        assert (ok, bad) == (0, 1)
+
+    def test_mixed_min_and_max_pair_in_order(self, tmp_path):
+        cur = {"thr": 90.0, "mre": 0.3}
+        base = {"thr": 100.0, "mre": 0.1}
+        args = ["--metric", "thr", "--min-ratio", "0.5",
+                "--metric", "mre", "--max-ratio", "2.0"]
+        assert self.run_gate(tmp_path, args, cur, base) == 1  # mre fails
+        args = ["--metric", "thr", "--min-ratio", "0.5",
+                "--metric", "mre", "--max-ratio", "4.0"]
+        assert self.run_gate(tmp_path, args, cur, base) == 0
+
+    def test_single_threshold_broadcasts(self, tmp_path):
+        cur = {"a": 50.0, "b": 60.0}
+        base = {"a": 100.0, "b": 100.0}
+        args = ["--metric", "a", "--metric", "b", "--min-ratio", "0.5"]
+        assert self.run_gate(tmp_path, args, cur, base) == 0
+
+    def test_threshold_count_mismatch_is_hard_error(self, tmp_path):
+        args = ["--metric", "a", "--metric", "b",
+                "--min-ratio", "0.5", "--max-ratio", "2.0",
+                "--max-ratio", "3.0"]
+        with pytest.raises(SystemExit, match="GATE ERROR"):
+            self.run_gate(tmp_path, args, {"a": 1.0, "b": 1.0},
+                          {"a": 1.0, "b": 1.0})
+
+    def test_null_metric_still_hard_errors(self, tmp_path):
+        args = ["--metric", "a", "--max-ratio", "2.0"]
+        with pytest.raises(SystemExit, match="null"):
+            self.run_gate(tmp_path, args, {"a": None}, {"a": 1.0})
