@@ -1,20 +1,29 @@
-"""Fig. 3 — LSTM workload predictor accuracy (paper: SMAPE ~6%).
+"""Fig. 3 — learned load prediction accuracy (paper: SMAPE ~6%).
 
-Trains the 25-unit LSTM + dense(1) predictor on held-out seeds per workload
-regime and reports SMAPE on an unseen seed; plus prediction latency (paper:
-"trained to predict workloads in under 50 milliseconds").
+Two sections:
+
+1. The paper-faithful §IV-A predictor: per workload regime, train the
+   25-unit LSTM + dense(1) on held-out seeds, report SMAPE on an unseen
+   seed and the per-regime single-prediction latency (paper: "trained to
+   predict workloads in under 50 milliseconds") — each regime's *own*
+   params, timed with the shared min-of-k harness (``repro.timing``).
+2. The multi-horizon forecaster (``core/forecast.py``): both backbones
+   (lstm / mlstm) trained on the fluctuating regime, SMAPE and q90
+   pinball loss per horizon {5, 10, 20, 60} s on an unseen seed, plus
+   single-window latency and batch predictions/s (the CI gate metrics).
 """
 from __future__ import annotations
 
-import time
-
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import save_results
+from benchmarks.common import save_results, time_fn
 from repro.cluster import make_trace
+from repro.core import forecast
 from repro.core.predictor import predict_batch, smape, train_predictor
 
 SCALE = 120.0
+BACKBONES = ("lstm", "mlstm")
 
 
 def run(quick: bool = False):
@@ -22,23 +31,59 @@ def run(quick: bool = False):
     epochs = 4 if quick else 12
     for kind in ("steady_low", "fluctuating", "steady_high"):
         traces = [make_trace(kind, seed=s) for s in range(2 if quick else 4)]
-        params = train_predictor(traces, scale=SCALE, epochs=epochs, seed=0, log=None)
+        params = train_predictor(traces, scale=SCALE, epochs=epochs, seed=0,
+                                 log=None)
         err = smape(params, [make_trace(kind, seed=9)], scale=SCALE)
-        payload[kind] = {"smape_pct": err}
-        rows.append(("fig3", f"smape_{kind}_pct", round(err, 2), "paper ~6%"))
 
-    # decision latency of one prediction (paper: < 50 ms)
-    hist = jnp.asarray(make_trace("fluctuating", seed=3)[:120], dtype=jnp.float32)[
-        None
-    ] / SCALE
-    predict_batch(params, hist).block_until_ready()   # warm
-    t0 = time.perf_counter()
-    reps = 20
-    for _ in range(reps):
-        predict_batch(params, hist).block_until_ready()
-    ms = (time.perf_counter() - t0) / reps * 1e3
-    payload["predict_latency_ms"] = ms
-    rows.append(("fig3", "predict_latency_ms", round(ms, 2), "paper <50ms"))
+        # per-regime single-prediction latency on this regime's own params
+        # (paper: < 50 ms) — min-of-k with device sync inside the clock
+        hist = jnp.asarray(make_trace(kind, seed=3)[:120],
+                           dtype=jnp.float32)[None] / SCALE
+        t = time_fn(lambda p=params, h=hist: predict_batch(p, h),
+                    reps=20, warmup=2)
+        ms = t.best * 1e3
+        payload[kind] = {"smape_pct": err, "predict_latency_ms": ms}
+        rows.append(("fig3", f"smape_{kind}_pct", round(err, 2), "paper ~6%"))
+        rows.append(("fig3", f"predict_latency_{kind}_ms", round(ms, 2),
+                     "paper <50ms"))
+
+    payload["forecast"] = {}
+    fc_epochs = {"lstm": 3 if quick else 8, "mlstm": 5 if quick else 20}
+    fc_lr = {"lstm": 5e-3, "mlstm": 3e-3}
+    traces = [make_trace("fluctuating", seed=s)
+              for s in range(2 if quick else 4)]
+    eval_traces = [make_trace("fluctuating", seed=9)]
+    for backbone in BACKBONES:
+        params, ch = forecast.train_forecaster(
+            traces, backbone=backbone, scale=SCALE,
+            epochs=fc_epochs[backbone], lr=fc_lr[backbone], seed=0)
+        sm = forecast.smape_horizons(params, eval_traces, backbone=backbone,
+                                     scale=SCALE, channel_scales=ch)
+        pb = forecast.pinball_horizons(params, eval_traces, backbone=backbone,
+                                       scale=SCALE, channel_scales=ch)
+        X, _, _ = forecast.make_forecast_dataset(eval_traces, scale=SCALE,
+                                                 channel_scales=ch)
+        Xj = jnp.asarray(X)
+        one = Xj[:1]
+        t1 = time_fn(lambda p=params, h=one, b=backbone:
+                     forecast.forecast_batch(p, h, backbone=b),
+                     reps=20, warmup=2)
+        tb = time_fn(lambda p=params, h=Xj, b=backbone:
+                     forecast.forecast_batch(p, h, backbone=b),
+                     reps=5, warmup=1)
+        per_s = len(X) / tb.best
+        payload["forecast"][backbone] = {
+            "smape_pct": {str(h): v for h, v in sm.items()},
+            "smape_mean_pct": float(np.mean(list(sm.values()))),
+            "pinball_q90": {str(h): v for h, v in pb.items()},
+            "predict_latency_ms": t1.best * 1e3,
+            "predictions_per_s": per_s,
+        }
+        for h, v in sm.items():
+            rows.append(("fig3", f"forecast_{backbone}_smape_{h}s_pct",
+                         round(v, 2), "paper ~6% @20s"))
+        rows.append(("fig3", f"forecast_{backbone}_predictions_per_s",
+                     round(per_s, 0), ""))
     save_results("fig3_predictor", payload)
     return rows
 

@@ -7,15 +7,17 @@ built-ins (`get_pipeline("paper-4stage")`, `get_scenario("bursty")`,
 predictor / policy lifecycle. See docs/API.md for the schema and quickstart.
 """
 from repro.api.specs import (ClusterSpec, ControllerSpec, ExperimentSpec,
-                             FleetSpec, NodeSpec, PipelineSpec, ScenarioSpec,
-                             TenantSpec, replace)
+                             FleetSpec, NodeSpec, PipelineSpec, PredictorSpec,
+                             ScenarioSpec, TenantSpec, replace)
 from repro.api.registry import (register_pipeline, register_scenario,
                                 register_controller, register_cluster,
-                                register_fleet, get_pipeline, get_scenario,
+                                register_fleet, register_predictor,
+                                get_pipeline, get_scenario,
                                 get_controller, get_cluster, get_fleet,
-                                controller_factory, list_pipelines,
+                                get_predictor, controller_factory,
+                                list_pipelines,
                                 list_scenarios, list_controllers,
-                                list_clusters, list_fleets)
+                                list_clusters, list_fleets, list_predictors)
 from repro.api.session import (Session, FleetSession, build_executors,
                                run_experiment)
 from repro.core.controller import Controller, ControllerBase, Observation, decide

@@ -17,14 +17,15 @@ from repro.cluster.workloads import WORKLOADS
 from repro.serving.arrivals import SCENARIOS
 
 from repro.api.specs import (ClusterSpec, ControllerSpec, FleetSpec,
-                             NodeSpec, PipelineSpec, ScenarioSpec,
-                             TenantSpec)
+                             NodeSpec, PipelineSpec, PredictorSpec,
+                             ScenarioSpec, TenantSpec)
 
 _PIPELINES: dict[str, PipelineSpec] = {}
 _SCENARIOS: dict[str, ScenarioSpec] = {}
 _CONTROLLERS: dict[str, tuple[ControllerSpec, object]] = {}
 _CLUSTERS: dict[str, ClusterSpec] = {}
 _FLEETS: dict[str, FleetSpec] = {}
+_PREDICTORS: dict[str, PredictorSpec] = {}
 
 
 # ---------------------------------------------------------------- pipelines --
@@ -101,6 +102,26 @@ def get_fleet(name: str) -> FleetSpec:
 
 def list_fleets() -> tuple[str, ...]:
     return tuple(sorted(_FLEETS))
+
+
+# --------------------------------------------------------------- predictors --
+
+def register_predictor(spec: PredictorSpec, *,
+                       name: str | None = None) -> PredictorSpec:
+    _PREDICTORS[name or spec.name] = spec
+    return spec
+
+
+def get_predictor(name: str) -> PredictorSpec:
+    try:
+        return _PREDICTORS[name]
+    except KeyError:
+        raise KeyError(f"unknown predictor {name!r}; "
+                       f"registered: {list_predictors()}") from None
+
+
+def list_predictors() -> tuple[str, ...]:
+    return tuple(sorted(_PREDICTORS))
 
 
 # -------------------------------------------------------------- controllers --
@@ -232,10 +253,27 @@ def _register_builtin_fleets():
         )))
 
 
+def _register_builtin_predictors():
+    # the paper's §IV-A predictor as a forecaster: 25-unit LSTM, single
+    # 20 s horizon — a drop-in for core/predictor.py through the spec path
+    register_predictor(PredictorSpec(name="lstm-20s", backbone="lstm",
+                                     horizons=(20,)))
+    # paper-faithful LSTM emitting every proactive-control horizon from one
+    # backbone pass — what the pre-warm baseline consumes by default
+    register_predictor(PredictorSpec(name="lstm-multi", backbone="lstm",
+                                     horizons=(5, 10, 20, 60)))
+    # the xLSTM matrix-memory backbone (nn/xlstm.py) at the same horizons —
+    # parallelisable over the window; needs a longer schedule to converge
+    register_predictor(PredictorSpec(name="mlstm-multi", backbone="mlstm",
+                                     horizons=(5, 10, 20, 60),
+                                     epochs=20, lr=3e-3))
+
+
 def _register_builtin_controllers():
     from repro.core.baselines import GreedyPolicy, IPAPolicy, RandomPolicy
-    from repro.core.expert import ExpertPolicy
+    from repro.core.expert import CapacityPolicy, ExpertPolicy
     from repro.core.opd import OPDPolicy
+    from repro.core.proactive import ProactiveController
 
     register_controller(
         "opd", lambda spec, pipe, params: OPDPolicy(
@@ -248,10 +286,34 @@ def _register_builtin_controllers():
         "random", lambda spec, pipe, params: RandomPolicy(pipe, seed=spec.seed))
     register_controller(
         "expert", lambda spec, pipe, params: ExpertPolicy(pipe))
+    # demand-matched min-cost: cheapest demand-covering config over the FULL
+    # variant space — variants switch with load (greedy's stay pinned)
+    register_controller(
+        "capacity", lambda spec, pipe, params: CapacityPolicy(pipe))
+    # forecast-driven pre-warm wrapper around a trained OPD policy: same
+    # training path as "opd", plus a prewarm_plan consumed by RuntimeEnv
+    register_controller(
+        "proactive", lambda spec, pipe, params: ProactiveController(
+            OPDPolicy(pipe, params, greedy=spec.greedy, seed=spec.seed)),
+        spec=ControllerSpec(name="proactive", train_episodes=4, num_envs=4))
+    # the same wrapper around the demand-matched analytic expert — the
+    # expert re-sizes (variant, replicas, batch) with predicted load, so the
+    # forecast moves real capacity ahead of a burst and the pre-warm slot
+    # absorbs the variant-switch cold start (fig45 proactive comparison)
+    register_controller(
+        "proactive-expert",
+        lambda spec, pipe, params: ProactiveController(ExpertPolicy(pipe)))
+    # the headline fig45 proactive arm: min-cost inner, so the forecast's
+    # early variant switches are pre-warmed at a config cost below the
+    # reactive baselines (accuracy-first experts overspend on ramps)
+    register_controller(
+        "proactive-capacity",
+        lambda spec, pipe, params: ProactiveController(CapacityPolicy(pipe)))
 
 
 _register_builtin_clusters()
 _register_builtin_pipelines()
 _register_builtin_scenarios()
 _register_builtin_fleets()
+_register_builtin_predictors()
 _register_builtin_controllers()

@@ -28,7 +28,7 @@ from repro.api.specs import ExperimentSpec, FleetSpec
 
 # per-step scalar keys copied into the report (runtime adds percentiles etc.)
 _STEP_KEYS = ("qos", "cost", "latency", "throughput", "excess", "demand")
-_TRAINABLE = ("opd",)
+_TRAINABLE = ("opd", "proactive")
 
 
 def build_executors(spec: ExperimentSpec):
@@ -48,6 +48,7 @@ class Session:
         self.trainer: OPDTrainer | None = None
         self.controller = None
         self._params = None
+        self._forecaster = None         # trained once, shared across envs
         self._report: dict | None = None
         # debug toggle: run every twin rollout under the checkify sanitizer
         # (NaN / div / OOB surface as JaxRuntimeError instead of reward
@@ -117,15 +118,48 @@ class Session:
 
     # ------------------------------------------------------------- serving --
 
+    def build_forecaster(self, *, log=None):
+        """Train the scenario's named ``PredictorSpec`` (once per session,
+        cached) on the scenario's *own arrival family* — per-second counts
+        Poisson-sampled from ``train_trace`` episode rate profiles, so the
+        model sees the integer-valued histories the Monitor will feed it,
+        decorrelated from the eval stream. Returns an ``as_forecast_fn``
+        adapter, or None when the scenario names no predictor."""
+        scen = self.spec.scenario
+        if scen.predictor is None:
+            return None
+        if self._forecaster is None:
+            from repro.api.registry import get_predictor
+            from repro.core import forecast
+            ps = get_predictor(scen.predictor)
+            traces = []
+            for ep in range(ps.train_episodes):
+                rates = np.maximum(scen.train_trace(ep), 0.0)
+                rng = np.random.default_rng(scen.seed + 104729 * (ep + 1))
+                traces.append(rng.poisson(rates).astype(np.float32))
+            scale = ps.scale or float(max(max(tr.max() for tr in traces), 1.0))
+            params, ch_scales = forecast.train_forecaster(
+                traces, backbone=ps.backbone, scale=scale,
+                horizons=ps.horizons, history=ps.history, hidden=ps.hidden,
+                dim=ps.dim, n_heads=ps.n_heads, epochs=ps.epochs,
+                batch=ps.batch, lr=ps.lr, seed=ps.seed, log=log)
+            self._forecaster = forecast.as_forecast_fn(
+                params, scale=scale, backbone=ps.backbone,
+                horizons=ps.horizons, history=ps.history,
+                n_heads=ps.n_heads, channel_scales=ch_scales)
+        return self._forecaster
+
     def build_env(self):
         spec, scen = self.spec, self.spec.scenario
+        forecaster = self.build_forecaster()
         if spec.backend == "analytic":
-            return PipelineEnv(self.pipe, scen.eval_trace(), seed=scen.seed)
+            return PipelineEnv(self.pipe, scen.eval_trace(), seed=scen.seed,
+                               forecaster=forecaster)
         if spec.backend == "runtime":
             executors = build_executors(spec) if spec.real else None
             return RuntimeEnv(self.pipe, scen.build_arrivals(),
                               horizon=scen.horizon, executors=executors,
-                              seq_len=spec.seq_len)
+                              seq_len=spec.seq_len, forecaster=forecaster)
         raise ValueError(f"unknown backend {spec.backend!r}")
 
     def with_params(self, params) -> Session:
@@ -232,6 +266,7 @@ class FleetSession:
         self.spec = spec
         self.fleet = None
         self._params: dict[str, object] = {}    # tenant name -> trained params
+        self._forecasters: dict[str, object] = {}  # tenant name -> forecaster
         self._report: dict | None = None
 
     @classmethod
@@ -264,10 +299,19 @@ class FleetSession:
             pipe = self.spec.tenant_pipeline(t).build()
             controller = controller_factory(t.controller.name)(
                 t.controller, pipe, self._params.get(t.name))
+            if t.scenario.predictor and t.name not in self._forecasters:
+                # train the tenant's named forecaster on its own arrival
+                # family (cached, so repeat build_fleet calls reuse it)
+                sub = Session(ExperimentSpec(
+                    pipeline=self.spec.tenant_pipeline(t),
+                    scenario=t.scenario, controller=t.controller,
+                    seq_len=self.spec.seq_len))
+                self._forecasters[t.name] = sub.build_forecaster()
             entries.append({"name": t.name, "pipe": pipe,
                             "arrivals": t.scenario.build_arrivals(),
                             "controller": controller,
-                            "priority": t.priority, "slo_p99": t.slo_p99})
+                            "priority": t.priority, "slo_p99": t.slo_p99,
+                            "forecaster": self._forecasters.get(t.name)})
         return build_fleet(entries,
                            admission_limit=self.spec.admission_limit,
                            min_share=self.spec.min_share,

@@ -135,14 +135,64 @@ class PipelineSpec:
 
 
 @dataclass(frozen=True)
+class PredictorSpec:
+    """A load forecaster (``core/forecast.py``), as data: backbone family,
+    forecast horizons, window geometry and training budget. ``scale`` is
+    the load normaliser; 0.0 (the default) means "derive from the training
+    traces" (their max, rounded up), so one spec serves any rate.
+
+    Built via ``Session`` against the scenario's own arrival family
+    (``ScenarioSpec.train_trace`` episodes), so the forecaster trains on
+    the workload it will serve — never on the eval stream itself."""
+    name: str
+    backbone: str = "lstm"           # "lstm" (paper §IV-A) | "mlstm" (xLSTM)
+    horizons: tuple[int, ...] = (5, 10, 20, 60)
+    history: int = 120               # seconds of load history per window
+    hidden: int = 25                 # LSTM units (paper: 25)
+    dim: int = 16                    # mLSTM model dim
+    n_heads: int = 2                 # mLSTM heads
+    epochs: int = 8
+    batch: int = 256
+    lr: float = 5e-3
+    seed: int = 0
+    scale: float = 0.0               # 0.0 = auto from training traces
+    train_episodes: int = 3          # training traces drawn from the scenario
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> PredictorSpec:
+        return cls(name=d["name"], backbone=str(d.get("backbone", "lstm")),
+                   horizons=tuple(int(h)
+                                  for h in d.get("horizons", (5, 10, 20, 60))),
+                   history=int(d.get("history", 120)),
+                   hidden=int(d.get("hidden", 25)),
+                   dim=int(d.get("dim", 16)),
+                   n_heads=int(d.get("n_heads", 2)),
+                   epochs=int(d.get("epochs", 8)),
+                   batch=int(d.get("batch", 256)),
+                   lr=float(d.get("lr", 5e-3)),
+                   seed=int(d.get("seed", 0)),
+                   scale=float(d.get("scale", 0.0)),
+                   train_episodes=int(d.get("train_episodes", 3)))
+
+
+@dataclass(frozen=True)
 class ScenarioSpec:
     """A workload: arrival kind (any of serving ``SCENARIOS`` or a paper
     workload regime from ``WORKLOADS``), its rate scale, seed and horizon.
-    For workload regimes ``rate`` is the trace's peak (paper default 120)."""
+    For workload regimes ``rate`` is the trace's peak (paper default 120).
+
+    ``predictor`` optionally names a registered ``PredictorSpec``: the
+    Session trains that forecaster on this scenario's arrival family and
+    attaches it to the built env (multi-horizon forecasts on every
+    Observation; horizon-matched ``predicted_load``)."""
     kind: str = "bursty"
     rate: float = 25.0
     seed: int = 0
     horizon: int = 120
+    predictor: str | None = None
 
     def build_arrivals(self) -> ArrivalProcess:
         if self.kind in WORKLOADS:
@@ -184,7 +234,8 @@ class ScenarioSpec:
     def from_dict(cls, d: dict) -> ScenarioSpec:
         return cls(kind=d["kind"], rate=float(d.get("rate", 25.0)),
                    seed=int(d.get("seed", 0)),
-                   horizon=int(d.get("horizon", 120)))
+                   horizon=int(d.get("horizon", 120)),
+                   predictor=d.get("predictor"))
 
 
 @dataclass(frozen=True)

@@ -37,20 +37,58 @@ class _ConfigEnvBase:
     cfg: Config
     monitor: Monitor
     predictor = None                 # callable: load_hist -> predicted load
+    forecaster = None                # callable: load_hist -> [H] max loads
+    forecast_in_state = False        # append forecast block to Eq. 5 state
 
     @property
     def state_dim(self) -> int:
         # per task: (u, p, m, l, t, z, f, b, c)  — Eq. (5) — plus, on a
         # heterogeneous topology, one free-capacity fraction per node so the
-        # feature extractor sees comprehensive node status
-        return self.pipe.n_tasks * (9 + self._n_node_features)
+        # feature extractor sees comprehensive node status, plus (opt-in via
+        # ``forecast_in_state``) one predicted max load per forecast horizon
+        return self.pipe.n_tasks * (9 + self._n_node_features
+                                    + self._n_forecast_features)
 
     @property
     def _n_node_features(self) -> int:
         return 0 if self.pipe.scalar_pool else self.pipe.topo.n_nodes
 
+    @property
+    def _n_forecast_features(self) -> int:
+        if self.forecaster is None or not self.forecast_in_state:
+            return 0
+        return len(self.forecaster.horizons)
+
+    def _forecasts(self) -> np.ndarray | None:
+        """Per-horizon predicted max loads ([H]), or None without a
+        forecaster. Until the monitor holds a full window of *real*
+        measurements the model would see constant left-padding it never
+        trained on (``Monitor.valid``) — fall back to the last-observed
+        load at every horizon."""
+        fc = self.forecaster
+        if fc is None:
+            return None
+        if self.monitor.valid < getattr(fc, "min_history", 0):
+            return np.full(len(fc.horizons), self._current_load())
+        return np.asarray(fc(self.monitor.load_history()), dtype=np.float64)
+
+    def _at_horizon(self, fc: np.ndarray, horizon: float) -> float:
+        """The forecast at the horizon nearest ``horizon`` seconds."""
+        hs = self.forecaster.horizons
+        return float(fc[int(np.argmin([abs(h - horizon) for h in hs]))])
+
+    def predicted_load_at(self, horizon: float) -> float:
+        """Horizon-matched predicted max load: the multi-horizon forecast
+        nearest ``horizon`` s when a forecaster is attached, else the
+        single-horizon predictor / current load."""
+        fc = self._forecasts()
+        if fc is None:
+            return float(self._predicted_load())
+        return self._at_horizon(fc, horizon)
+
     def _observe(self, cur: float | None = None,
-                 pred: float | None = None) -> np.ndarray:
+                 pred: float | None = None,
+                 fc: np.ndarray | None = None) -> np.ndarray:
         pipe, cfg = self.pipe, self.cfg
         u = (pipe.w_max - resource_usage(pipe, cfg)) / pipe.w_max
         p = (self._current_load() if cur is None else cur) / 100.0
@@ -63,6 +101,12 @@ class _ConfigEnvBase:
                                                strict=True)]
         else:
             node_free = []
+        if self._n_forecast_features:
+            if fc is None:
+                fc = self._forecasts()
+            fc_feats = [float(v) / 100.0 for v in fc]
+        else:
+            fc_feats = []
         rows = []
         for n, task in enumerate(pipe.tasks):
             var = task.variants[cfg.z[n]]
@@ -74,7 +118,7 @@ class _ConfigEnvBase:
                 cfg.f[n] / pipe.f_max,
                 cfg.b[n] / pipe.b_max,
                 cfg.f[n] * var.cost / pipe.w_max,            # c_n
-            ] + node_free)
+            ] + node_free + fc_feats)
         return np.asarray(rows, dtype=np.float32).reshape(-1)
 
     def _current_load(self) -> float:
@@ -82,15 +126,30 @@ class _ConfigEnvBase:
 
     def _predicted_load(self) -> float:
         if self.predictor is not None:
-            return float(self.predictor(self.monitor.load_history()))
+            if self.monitor.valid >= getattr(self.predictor,
+                                             "min_history", 0):
+                return float(self.predictor(self.monitor.load_history()))
+            return self._current_load()  # window still padded — see Monitor
+        if self.forecaster is not None:
+            fc = self._forecasts()
+            return self._at_horizon(fc, ADAPTATION_INTERVAL)
         return self._current_load()
 
     def observe(self) -> Observation:
         """Public decision-time snapshot for the Controller protocol."""
         cur = float(self._current_load())
-        pred = float(self._predicted_load())   # one predictor call per obs
-        return Observation(state=self._observe(cur, pred), config=self.cfg,
-                           current_load=cur, predicted_load=pred)
+        fc = self._forecasts()                 # one forecaster call per obs
+        if self.predictor is not None or fc is None:
+            pred = float(self._predicted_load())
+        else:
+            pred = self._at_horizon(fc, ADAPTATION_INTERVAL)
+        return Observation(
+            state=self._observe(cur, pred, fc), config=self.cfg,
+            current_load=cur, predicted_load=pred,
+            forecasts=(None if fc is None
+                       else tuple(float(v) for v in fc)),
+            horizons=(None if self.forecaster is None
+                      else tuple(self.forecaster.horizons)))
 
     def default_config(self) -> Config:
         N = self.pipe.n_tasks
@@ -102,12 +161,15 @@ class _ConfigEnvBase:
 class PipelineEnv(_ConfigEnvBase):
     def __init__(self, pipe: Pipeline, trace: np.ndarray, *,
                  weights: QoSWeights | None = None, history: int = 120,
-                 predictor=None, seed: int = 0):
+                 predictor=None, forecaster=None,
+                 forecast_in_state: bool = False, seed: int = 0):
         self.pipe = pipe
         self.trace = np.asarray(trace, dtype=np.float64)
         self.w = weights or QoSWeights()
         self.monitor = Monitor(history)
         self.predictor = predictor           # callable: load_hist -> predicted
+        self.forecaster = forecaster         # callable: load_hist -> [H]
+        self.forecast_in_state = bool(forecast_in_state)
         self.rng = np.random.default_rng(seed)
         self.n_steps = len(self.trace) // ADAPTATION_INTERVAL
         self.reset()
@@ -172,7 +234,9 @@ class RuntimeEnv(_ConfigEnvBase):
 
     def __init__(self, pipe: Pipeline, arrivals, *, horizon: int = 120,
                  weights: QoSWeights | None = None, history: int = 120,
-                 predictor=None, executors: list | None = None,
+                 predictor=None, forecaster=None,
+                 forecast_in_state: bool = False,
+                 executors: list | None = None,
                  max_wait: float | None = None, seq_len: int = 32,
                  vocab: int = 256, loop=None, rid_base: int = 0):
         # all stochasticity derives from arrivals.seed (arrival times and
@@ -187,6 +251,8 @@ class RuntimeEnv(_ConfigEnvBase):
         self.horizon = int(horizon)
         self.w = weights or QoSWeights()
         self.predictor = predictor
+        self.forecaster = forecaster
+        self.forecast_in_state = bool(forecast_in_state)
         self.executors = executors
         self.max_wait = DEFAULT_MAX_WAIT if max_wait is None else max_wait
         self.seq_len = seq_len

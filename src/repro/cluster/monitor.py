@@ -17,6 +17,14 @@ class Monitor:
         self.load.append(float(load))
         self.metrics.append(dict(metrics))
 
+    @property
+    def valid(self) -> int:
+        """Number of *real* measurements in the window. ``load_history``
+        left-pads a cold window with a constant — consumers that trained on
+        real traces (predictor/forecaster) should fall back to the
+        last-observed load until ``valid >= fn.min_history``."""
+        return len(self.load)
+
     def load_history(self) -> np.ndarray:
         """Last ``history`` seconds of load, left-padded with the oldest value."""
         if not self.load:

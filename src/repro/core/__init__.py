@@ -13,7 +13,13 @@ from repro.core.ppo import PPOConfig, OPDTrainer, compute_gae
 from repro.core.vecenv import (PipelineTables, EnvState, tables_from_pipeline,
                                init_state, decode_action, observe, step,
                                rollout, vec_rollout, gae_scan, vec_gae)
-from repro.core.expert import ExpertPolicy
+from repro.core.expert import CapacityPolicy, ExpertPolicy, capacity_config
 from repro.core.baselines import RandomPolicy, GreedyPolicy, IPAPolicy
 from repro.core.opd import OPDPolicy, run_episode, run_episodes_vectorized
 from repro.core.controller import Observation, ControllerBase, decide
+from repro.core.forecast import (init_forecaster, forecast_batch,
+                                 train_forecaster, smape_horizons,
+                                 pinball_horizons, as_forecast_fn,
+                                 make_forecast_dataset, telemetry_trace,
+                                 HORIZONS)
+from repro.core.proactive import ProactiveController

@@ -28,6 +28,12 @@ class Observation:
     config: Config           # configuration currently live
     current_load: float      # newest monitored arrival rate (req/s)
     predicted_load: float    # predictor's load estimate for the next interval
+    # multi-horizon forecasts (core/forecast.py), when the env carries a
+    # forecaster: forecasts[k] = predicted max load over the next
+    # horizons[k] seconds. None otherwise — absent, not zero, so policies
+    # can distinguish "no forecaster" from "forecast of 0".
+    forecasts: tuple[float, ...] | None = None
+    horizons: tuple[int, ...] | None = None
 
 
 @runtime_checkable
@@ -50,7 +56,19 @@ class ControllerBase:
 
 def decide(controller, env) -> Config:
     """Invoke ``controller`` on ``env``: prefer the Observation protocol,
-    fall back to the legacy ``(env) -> Config`` callable style."""
+    fall back to the legacy ``(env) -> Config`` callable style.
+
+    Proactive controllers may additionally publish a ``prewarm_plan`` —
+    ``[(stage, variant), ...]`` standby warm-ups to start this interval —
+    which is forwarded to the env's live runtime when it has one
+    (``RuntimeEnv``); the analytic env has no warm/cold machinery, so the
+    plan is a no-op there."""
     if hasattr(controller, "decide"):
-        return controller.decide(env.observe())
+        cfg = controller.decide(env.observe())
+        plan = getattr(controller, "prewarm_plan", None)
+        runtime = getattr(env, "runtime", None)
+        if plan and runtime is not None and hasattr(runtime, "prewarm"):
+            for stage, variant in plan:
+                runtime.prewarm(int(stage), int(variant))
+        return cfg
     return controller(env)

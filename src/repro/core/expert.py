@@ -17,6 +17,61 @@ from repro.core.controller import ControllerBase, Observation
 from repro.core.mdp import Config, Pipeline, QoSWeights, feasible, reward
 
 
+def capacity_config(pipe: Pipeline, demand: float,
+                    prefer: str = "latency") -> Config:
+    """Cheapest (z, f, b) per stage whose throughput covers demand, placed
+    stage by stage through the shared placement scheduler (on a scalar pool
+    this is exactly the legacy remaining-budget loop).
+
+    ``prefer`` breaks ties among equal-cost demand-covering variants:
+    ``"latency"`` (default — the expert's capacity start, keeps its
+    historical behavior) picks the fastest, ``"accuracy"`` picks the most
+    accurate. The accuracy preference is what makes the variant *switch*
+    with demand on this pipeline's near-uniform per-replica costs: low load
+    is served by accurate slow variants and bursts degrade to fast ones —
+    which is what gives the proactive pre-warm slot something to warm."""
+    bc = pipe.batch_choices()
+    z, f, b = [], [], []
+    cursor = pipe.topo.cursor()
+    for task in pipe.tasks:
+        best = None
+        for zi, var in enumerate(task.variants):
+            tie = -var.accuracy if prefer == "accuracy" else None
+            for fi in range(1, pipe.f_max + 1):
+                if not cursor.can_place(var.resource, fi):
+                    break
+                for bi in bc:
+                    if var.throughput(bi, fi) >= demand:
+                        key = var.latency(bi) if tie is None else tie
+                        cand = (fi * var.cost, key, zi, fi, bi)
+                        if best is None or cand < best:
+                            best = cand
+                        break
+        if best is None:
+            best = (0, 0, 0, 1, 1)
+        _, _, zi, fi, bi = best
+        cursor.place(task.variants[zi].resource, fi)
+        z.append(zi), f.append(fi), b.append(bi)
+    return Config(z=tuple(z), f=tuple(f), b=tuple(b))
+
+
+class CapacityPolicy(ControllerBase):
+    """Demand-matched min-cost controller with adaptive degradation: serve
+    the predicted load with the cheapest demand-covering configuration,
+    preferring the most accurate variant at equal cost. The cost-first
+    counterpart of the reward-descending expert — and the inner controller
+    of the headline proactive arm in fig45: its variant choice tracks load
+    (so forecasts pre-warm real switches) at a config cost below the flat
+    reactive baselines."""
+
+    def __init__(self, pipe: Pipeline):
+        self.pipe = pipe
+
+    def decide(self, obs: Observation) -> Config:
+        return capacity_config(self.pipe, obs.predicted_load,
+                               prefer="accuracy")
+
+
 class ExpertPolicy(ControllerBase):
     def __init__(self, pipe: Pipeline, weights: QoSWeights | None = None,
                  sweeps: int = 3):
@@ -34,31 +89,7 @@ class ExpertPolicy(ControllerBase):
                       b=tuple(1 for _ in pipe.tasks))
 
     def _capacity_start(self, demand: float) -> Config:
-        """Cheapest (z, f, b) per stage whose throughput covers demand,
-        placed stage by stage through the shared placement scheduler (on a
-        scalar pool this is exactly the legacy remaining-budget loop)."""
-        pipe = self.pipe
-        bc = pipe.batch_choices()
-        z, f, b = [], [], []
-        cursor = pipe.topo.cursor()
-        for task in pipe.tasks:
-            best = None
-            for zi, var in enumerate(task.variants):
-                for fi in range(1, pipe.f_max + 1):
-                    if not cursor.can_place(var.resource, fi):
-                        break
-                    for bi in bc:
-                        if var.throughput(bi, fi) >= demand:
-                            cand = (fi * var.cost, var.latency(bi), zi, fi, bi)
-                            if best is None or cand < best:
-                                best = cand
-                            break
-            if best is None:
-                best = (0, 0, 0, 1, 1)
-            _, _, zi, fi, bi = best
-            cursor.place(task.variants[zi].resource, fi)
-            z.append(zi), f.append(fi), b.append(bi)
-        return Config(z=tuple(z), f=tuple(f), b=tuple(b))
+        return capacity_config(self.pipe, demand)
 
     # ----------------------------------------------------------- descent --
 

@@ -60,6 +60,15 @@ def _train_step(params, opt, xb, yb, lr):
 def train_predictor(traces: list[np.ndarray], *, scale: float, epochs: int = 5,
                     batch: int = 256, seed: int = 0, lr: float = 5e-3, log=None):
     X, y = make_dataset(traces, scale=scale)
+    if len(X) == 0:
+        raise ValueError(
+            f"empty predictor dataset: need traces longer than "
+            f"HISTORY + HORIZON = {HISTORY + HORIZON} s "
+            f"(got {[len(t) for t in traces]})")
+    # clamp so short traces (quick mode, small regimes) still take gradient
+    # steps — an oversized batch would make the step loop below empty and
+    # silently return untrained params
+    batch = min(int(batch), len(X))
     rng = np.random.default_rng(seed)
     params = init_predictor(jax.random.PRNGKey(seed))
     # start the output head at the target mean — removes the large constant
@@ -94,8 +103,14 @@ def smape(params, traces: list[np.ndarray], *, scale: float) -> float:
 
 
 def as_predictor_fn(params, *, scale: float):
-    """Adapter for PipelineEnv: load_history [HISTORY] -> predicted load."""
+    """Adapter for PipelineEnv: load_history [HISTORY] -> predicted load.
+
+    Advertises ``fn.min_history`` so callers can fall back to the
+    last-observed load while the monitor window is still padded (see
+    ``Monitor.valid``) — the model never trained on constant-padded input.
+    """
     def fn(hist: np.ndarray) -> float:
         h = jnp.asarray(hist[-HISTORY:], dtype=jnp.float32)[None] / scale
         return float(predict_batch(params, h)[0]) * scale
+    fn.min_history = HISTORY
     return fn

@@ -37,6 +37,7 @@ from dataclasses import replace
 
 from repro.cluster.topology import ClusterTopology
 from repro.core.controller import decide
+from repro.core.mdp import ADAPTATION_INTERVAL
 from repro.serving.runtime import EventLoop
 
 # Tenant shares are floor-quantized to this resolution before topologies are
@@ -134,8 +135,16 @@ class FleetRuntime:
         """Re-divide the cluster: share proportional to priority x predicted
         load, floored at ``min_share``, floor-quantized. Returns the number
         of tenants whose share changed (0 for a single-tenant fleet after
-        the first call — its share is always exactly 1.0)."""
-        raw = [t.priority * max(float(t.env._predicted_load()), 1.0)
+        the first call — its share is always exactly 1.0).
+
+        Demand is the load predicted over the *next adaptation interval* —
+        horizon-matched through ``predicted_load_at`` when the tenant env
+        carries a multi-horizon forecaster, which falls back to the
+        single-horizon predictor / last-second load otherwise (shares are
+        re-divided once per interval, so a last-second estimate lags a
+        burst by a full interval)."""
+        raw = [t.priority
+               * max(float(t.env.predicted_load_at(ADAPTATION_INTERVAL)), 1.0)
                for t in self.tenants]
         total = sum(raw)
         shares = [max(r / total, self.min_share) for r in raw]
@@ -209,9 +218,10 @@ def build_fleet(entries: list[dict], *, admission_limit: float | None = None,
                 weights=None, history: int = 120) -> FleetRuntime:
     """Assemble a fleet from tenant descriptions. Each entry is a dict with
     ``name``, ``pipe`` (carrying the *shared* cluster topology), ``arrivals``
-    and ``controller``, plus optional ``priority``, ``slo_p99`` and
-    ``predictor``. Request ids are offset per tenant so completion records
-    stay globally unique."""
+    and ``controller``, plus optional ``priority``, ``slo_p99``,
+    ``predictor`` and ``forecaster`` (multi-horizon; drives horizon-matched
+    arbitration in ``reallocate``). Request ids are offset per tenant so
+    completion records stay globally unique."""
     from repro.cluster.env import RuntimeEnv
     loop = EventLoop()
     tenants = []
@@ -219,6 +229,7 @@ def build_fleet(entries: list[dict], *, admission_limit: float | None = None,
         env = RuntimeEnv(e["pipe"], e["arrivals"], horizon=horizon,
                          weights=weights, history=history,
                          predictor=e.get("predictor"),
+                         forecaster=e.get("forecaster"),
                          max_wait=max_wait, seq_len=seq_len,
                          loop=loop, rid_base=i * 10_000_000)
         tenants.append(FleetTenant(e["name"], env, e["controller"],

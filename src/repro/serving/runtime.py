@@ -108,6 +108,8 @@ class RuntimeStage:
         self.in_flight = 0
         self._busy: set[int] = set()  # replica indices currently serving
         self.blocked_until = 0.0      # cold-start gate (virtual s)
+        self.warm_z: int | None = None  # variant being pre-warmed off-path
+        self.warm_ready = 0.0           # virtual time its cold start finishes
         self.busy_time = 0.0          # Σ replica-seconds of service charged
         self.served = 0
         self._pending_timer: float | None = None
@@ -158,6 +160,7 @@ class ServingRuntime:
         self.completed: list[Request] = []
         self.in_system = 0            # arrived, not yet fully served
         self.switch_count = 0
+        self.prewarm_count = 0        # off-path variant warm-ups started
         self.migration_count = 0      # replicas moved across nodes by reconfigs
         self.last_migrations = 0
         self.stale_timers_dropped = 0  # superseded timer events ignored
@@ -241,6 +244,28 @@ class ServingRuntime:
 
     # ------------------------------------------------------ control API --
 
+    def prewarm(self, stage: int, z: int, *,
+                cold_start: float = COLD_START_SECONDS) -> bool:
+        """Start warming variant ``z`` on ``stage`` *off the serving path*:
+        the cold start runs in the background (container pull / weight load
+        on spare node capacity) while the live variant keeps serving. A
+        later ``apply_config`` switching this stage to ``z`` pays only the
+        warm-up still outstanding — zero if ``cold_start`` seconds have
+        already elapsed. A no-op when ``z`` is already live or already
+        warming; re-warming a *different* variant replaces the previous
+        warm (one standby slot per stage). Returns True iff a warm-up was
+        started."""
+        st = self.stages[stage]
+        z = int(z) % len(st.task.variants)
+        if z == st.z:
+            return False
+        if st.warm_z == z:
+            return False  # already warming (possibly already ready)
+        st.warm_z = z
+        st.warm_ready = self.now + cold_start
+        self.prewarm_count += 1
+        return True
+
     def apply_config(self, cfg: Config, *,
                      cold_start: float = COLD_START_SECONDS) -> int:
         """Live reconfiguration (the OPD action). Variant switches pay
@@ -258,8 +283,18 @@ class ServingRuntime:
             if z_new != stage.z:
                 switched += 1
                 stage.z = z_new
-                stage.blocked_until = max(stage.blocked_until,
-                                          self.now + cold_start)
+                if stage.warm_z == z_new:
+                    # pre-warmed: pay only the warm-up still outstanding
+                    # (zero once warm_ready has passed)
+                    stage.blocked_until = max(stage.blocked_until,
+                                              stage.warm_ready)
+                else:
+                    stage.blocked_until = max(stage.blocked_until,
+                                              self.now + cold_start)
+                # any variant switch retires the standby slot: a warm for
+                # the new variant is consumed, a warm for some other
+                # variant is stale (the fabric re-targets the slot)
+                stage.warm_z = None
             stage.set_replicas(int(cfg.f[n]), self.now)
             stage.batcher.batch_size = max(1, int(cfg.b[n]))
         if pl is not None:
@@ -436,6 +471,7 @@ class ServingRuntime:
             stage_capacity=[s.replica_seconds(self.now)
                             for s in self.stages])
         out["migrations"] = self.migration_count
+        out["prewarms"] = self.prewarm_count
         if self.topo is not None and self.topo.n_nodes > 1:
             out["node_busy_s"] = list(self.node_busy)
             out["node_utilization"] = self.node_utilization()
